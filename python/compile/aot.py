@@ -1,0 +1,129 @@
+"""AOT compile path: lower the FNO forward and Adam train step to HLO
+*text* and write initial parameters + a manifest for the rust runtime.
+
+HLO text (NOT ``lowered.compile()``/``serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+offline xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import FnoConfig, adam_train_step, forward_fn, init_params, param_arrays, param_names
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_npy_f32(path, arr):
+    """Minimal .npy v1.0 writer (float32, C-order) matching rust util::npy."""
+    import numpy as np
+
+    np.save(path, np.asarray(arr, dtype=np.float32))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--grid", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--width", type=int, default=24)
+    ap.add_argument("--modes", type=int, default=8)
+    ap.add_argument("--layers", type=int, default=3)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = FnoConfig(
+        grid=args.grid,
+        batch=args.batch,
+        width=args.width,
+        modes=args.modes,
+        layers=args.layers,
+    )
+    os.makedirs(args.out, exist_ok=True)
+    params_dir = os.path.join(args.out, "params")
+    os.makedirs(params_dir, exist_ok=True)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    arrays = param_arrays(params)
+    names = param_names(params)
+
+    # --- initial parameters -------------------------------------------------
+    param_meta = []
+    for name, arr in params:
+        write_npy_f32(os.path.join(params_dir, f"{name}.npy"), arr)
+        param_meta.append({"name": name, "shape": list(arr.shape)})
+
+    # --- forward artifact ---------------------------------------------------
+    x_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.grid, cfg.grid, 1), jnp.float32)
+    fwd = forward_fn(cfg)
+    fwd_args = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in arrays] + [x_spec]
+    fwd_lowered = jax.jit(fwd).lower(*fwd_args)
+    fwd_path = os.path.join(args.out, "fno_forward.hlo.txt")
+    with open(fwd_path, "w") as f:
+        f.write(to_hlo_text(fwd_lowered))
+
+    # --- train-step artifact -------------------------------------------------
+    step_fn = adam_train_step(cfg, lr=args.lr)
+    zeros_like = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in arrays]
+    step_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    y_spec = x_spec
+    ts_args = zeros_like + zeros_like + zeros_like + [step_spec, x_spec, y_spec]
+    ts_lowered = jax.jit(step_fn).lower(*ts_args)
+    ts_path = os.path.join(args.out, "fno_train_step.hlo.txt")
+    with open(ts_path, "w") as f:
+        f.write(to_hlo_text(ts_lowered))
+
+    # --- manifest -------------------------------------------------------------
+    manifest = {
+        "config": cfg.to_dict(),
+        "lr": args.lr,
+        "seed": args.seed,
+        "params": param_meta,
+        "artifacts": {
+            "forward": os.path.basename(fwd_path),
+            "train_step": os.path.basename(ts_path),
+        },
+        "signature": {
+            "forward_inputs": names + ["x"],
+            "train_step_inputs": names
+            + [f"m_{n}" for n in names]
+            + [f"v_{n}" for n in names]
+            + ["step", "x", "y"],
+            "train_step_outputs": names
+            + [f"m_{n}" for n in names]
+            + [f"v_{n}" for n in names]
+            + ["step", "loss"],
+        },
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    print(
+        f"artifacts → {args.out}: forward ({os.path.getsize(fwd_path)//1024} KiB), "
+        f"train_step ({os.path.getsize(ts_path)//1024} KiB), "
+        f"{len(param_meta)} param tensors"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the spectral-convolution kernel.
+
+The FNO spectral layer multiplies each retained Fourier mode's channel
+vector by a per-mode complex weight matrix:
+
+    out[b, kx, ky, o] = sum_i  x[b, kx, ky, i] * w[kx, ky, i, o]   (complex)
+
+This file is the correctness reference the Pallas kernel is tested against
+(hypothesis sweeps shapes/dtypes in ``python/tests/test_kernel.py``).
+"""
+
+import jax.numpy as jnp
+
+
+def spectral_conv_ref(xr, xi, wr, wi):
+    """Complex per-mode channel mixing, split into real/imag planes.
+
+    Args:
+      xr, xi: [B, KX, KY, CIN] real/imaginary parts of the truncated modes.
+      wr, wi: [KX, KY, CIN, COUT] real/imaginary parts of the mode weights.
+
+    Returns:
+      (or_, oi): [B, KX, KY, COUT] real/imaginary outputs.
+    """
+    xr = jnp.asarray(xr)
+    xi = jnp.asarray(xi)
+    wr = jnp.asarray(wr)
+    wi = jnp.asarray(wi)
+    or_ = jnp.einsum("bxyi,xyio->bxyo", xr, wr) - jnp.einsum("bxyi,xyio->bxyo", xi, wi)
+    oi = jnp.einsum("bxyi,xyio->bxyo", xr, wi) + jnp.einsum("bxyi,xyio->bxyo", xi, wr)
+    return or_, oi
+
+
+def spectral_conv_complex_ref(x, w):
+    """Same contraction in native complex arithmetic (cross-check)."""
+    return jnp.einsum("bxyi,xyio->bxyo", x, w)

@@ -1,0 +1,186 @@
+"""L2: FNO-2d in JAX — forward pass, relative-L2 loss and an Adam train
+step, all built on the L1 Pallas spectral-conv kernel so the whole model
+lowers into a single HLO module for the rust runtime.
+
+Parameters are a flat ``[(name, array), ...]`` list in a FIXED order — the
+rust side addresses buffers positionally via ``manifest.json``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.spectral_conv import spectral_conv
+
+
+# ---------------------------------------------------------------- config
+
+
+class FnoConfig:
+    """Architecture hyper-parameters (baked into the AOT artifact)."""
+
+    def __init__(self, grid=32, batch=8, width=24, modes=8, layers=3, proj=64):
+        self.grid = grid
+        self.batch = batch
+        self.width = width
+        self.modes = modes
+        self.layers = layers
+        self.proj = proj
+
+    def to_dict(self):
+        return {
+            "grid": self.grid,
+            "batch": self.batch,
+            "width": self.width,
+            "modes": self.modes,
+            "layers": self.layers,
+            "proj": self.proj,
+        }
+
+
+# ---------------------------------------------------------------- params
+
+
+def init_params(cfg, key):
+    """Initialize the flat parameter list (order is the ABI)."""
+    params = []
+    k = iter(jax.random.split(key, 4 + 6 * cfg.layers))
+
+    def glorot(key, shape, fan_in, fan_out):
+        s = jnp.sqrt(2.0 / (fan_in + fan_out))
+        return (jax.random.normal(key, shape) * s).astype(jnp.float32)
+
+    params.append(("lift_w", glorot(next(k), (1, cfg.width), 1, cfg.width)))
+    params.append(("lift_b", jnp.zeros((cfg.width,), jnp.float32)))
+    for l in range(cfg.layers):
+        m, w = cfg.modes, cfg.width
+        scale = 1.0 / (w * w)
+        params.append(
+            (f"spec{l}_wr", (jax.random.normal(next(k), (2 * m, m, w, w)) * scale).astype(jnp.float32))
+        )
+        params.append(
+            (f"spec{l}_wi", (jax.random.normal(next(k), (2 * m, m, w, w)) * scale).astype(jnp.float32))
+        )
+        params.append((f"byp{l}_w", glorot(next(k), (w, w), w, w)))
+        params.append((f"byp{l}_b", jnp.zeros((w,), jnp.float32)))
+    params.append(("proj1_w", glorot(next(k), (cfg.width, cfg.proj), cfg.width, cfg.proj)))
+    params.append(("proj1_b", jnp.zeros((cfg.proj,), jnp.float32)))
+    params.append(("proj2_w", glorot(next(k), (cfg.proj, 1), cfg.proj, 1)))
+    params.append(("proj2_b", jnp.zeros((1,), jnp.float32)))
+    return params
+
+
+def param_arrays(params):
+    return [a for (_, a) in params]
+
+
+def param_names(params):
+    return [n for (n, _) in params]
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _spectral_layer(h, wr, wi, modes):
+    """One FNO spectral mixing: rfft2 → truncate → per-mode matmul (Pallas)
+    → scatter back → irfft2."""
+    b, s, _, w = h.shape
+    m = modes
+    h_hat = jnp.fft.rfft2(h, axes=(1, 2))  # [B, S, S//2+1, W] complex64
+
+    # Keep the two corner blocks in kx (low positive & negative freqs) and
+    # the lowest m in ky; stack to [B, 2m, m, W].
+    top = h_hat[:, :m, :m, :]
+    bot = h_hat[:, -m:, :m, :]
+    x = jnp.concatenate([top, bot], axis=1)
+    or_, oi = spectral_conv(
+        jnp.real(x).astype(jnp.float32),
+        jnp.imag(x).astype(jnp.float32),
+        wr,
+        wi,
+    )
+    out = or_ + 1j * oi
+
+    zeros = jnp.zeros_like(h_hat)
+    zeros = zeros.at[:, :m, :m, :].set(out[:, :m])
+    zeros = zeros.at[:, -m:, :m, :].set(out[:, m:])
+    return jnp.fft.irfft2(zeros, s=(s, s), axes=(1, 2)).astype(jnp.float32)
+
+
+def forward(cfg, arrays, x):
+    """FNO forward: x [B, S, S, 1] → prediction [B, S, S, 1].
+
+    `arrays` is the positional parameter list from ``param_arrays``.
+    """
+    it = iter(arrays)
+    lift_w, lift_b = next(it), next(it)
+    h = x @ lift_w + lift_b  # [B,S,S,W]
+    for _ in range(cfg.layers):
+        wr, wi, byp_w, byp_b = next(it), next(it), next(it), next(it)
+        spec = _spectral_layer(h, wr, wi, cfg.modes)
+        lin = h @ byp_w + byp_b
+        h = jax.nn.gelu(spec + lin)
+    p1w, p1b, p2w, p2b = next(it), next(it), next(it), next(it)
+    h = jax.nn.gelu(h @ p1w + p1b)
+    return h @ p2w + p2b
+
+
+def relative_l2(pred, target):
+    """Mean relative L2 error over the batch (the FNO community metric)."""
+    diff = jnp.sqrt(jnp.sum((pred - target) ** 2, axis=(1, 2, 3)))
+    norm = jnp.sqrt(jnp.sum(target**2, axis=(1, 2, 3))) + 1e-8
+    return jnp.mean(diff / norm)
+
+
+# ---------------------------------------------------------------- training
+
+
+def adam_train_step(cfg, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """Build the jittable train step:
+
+      (params..., m..., v..., step, x, y) → (params'..., m'..., v'..., loss)
+
+    All state flows through the signature — the rust runtime owns it.
+    """
+
+    def loss_fn(arrays, x, y):
+        return relative_l2(forward(cfg, arrays, x), y)
+
+    def step_fn(*args):
+        n = _nparams(cfg)
+        arrays = list(args[:n])
+        m_state = list(args[n : 2 * n])
+        v_state = list(args[2 * n : 3 * n])
+        step = args[3 * n]
+        x, y = args[3 * n + 1], args[3 * n + 2]
+
+        loss, grads = jax.value_and_grad(loss_fn)(arrays, x, y)
+        step = step + 1.0
+        outs = []
+        new_m, new_v = [], []
+        for a, g, mm, vv in zip(arrays, grads, m_state, v_state):
+            mm = b1 * mm + (1.0 - b1) * g
+            vv = b2 * vv + (1.0 - b2) * g * g
+            mhat = mm / (1.0 - b1**step)
+            vhat = vv / (1.0 - b2**step)
+            outs.append(a - lr * mhat / (jnp.sqrt(vhat) + eps))
+            new_m.append(mm)
+            new_v.append(vv)
+        return tuple(outs) + tuple(new_m) + tuple(new_v) + (step, loss)
+
+    return step_fn
+
+
+def _nparams(cfg):
+    return 2 + 4 * cfg.layers + 4
+
+
+def forward_fn(cfg):
+    """Build the jittable inference function (params..., x) → (yhat,)."""
+
+    def fn(*args):
+        n = _nparams(cfg)
+        arrays = list(args[:n])
+        x = args[n]
+        return (forward(cfg, arrays, x),)
+
+    return fn

@@ -1,0 +1,64 @@
+"""AOT artifact tests: the HLO text artifacts exist, parse as HLO modules,
+and the manifest is structurally sound and consistent with the params."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _need_artifacts():
+    if not os.path.exists(os.path.join(ART, "manifest.json")):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+
+
+def test_manifest_structure():
+    _need_artifacts()
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    assert set(m["artifacts"]) == {"forward", "train_step"}
+    cfg = m["config"]
+    for key in ("grid", "batch", "width", "modes", "layers"):
+        assert cfg[key] > 0
+    names = [p["name"] for p in m["params"]]
+    assert names[0] == "lift_w" and names[-1] == "proj2_b"
+    sig = m["signature"]
+    n = len(names)
+    assert len(sig["train_step_inputs"]) == 3 * n + 3
+    assert len(sig["train_step_outputs"]) == 3 * n + 2
+
+
+def test_hlo_text_is_hlo():
+    _need_artifacts()
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    for kind in ("forward", "train_step"):
+        path = os.path.join(ART, m["artifacts"][kind])
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{kind} is not HLO text"
+        assert "ENTRY" in text
+        # fft must have survived lowering (the FNO core).
+        assert "fft" in text.lower(), f"{kind} lost the FFT"
+
+
+def test_param_files_match_manifest():
+    _need_artifacts()
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    for p in m["params"]:
+        arr = np.load(os.path.join(ART, "params", p["name"] + ".npy"))
+        assert list(arr.shape) == p["shape"], p["name"]
+        assert arr.dtype == np.float32
+        assert np.isfinite(arr).all(), p["name"]
+
+
+def test_rust_npy_interchange(tmp_path):
+    """Arrays written by numpy are read back identically — the same format
+    rust util::npy consumes/produces (cross-language contract)."""
+    a = np.arange(12, dtype=np.float64).reshape(3, 4) * 0.5
+    np.save(tmp_path / "x.npy", a)
+    b = np.load(tmp_path / "x.npy")
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,13 @@
+//! `cargo bench --bench ablation` — regenerates the paper's Table 2
+//! (sorting ablation with the δ-subspace metric).
+
+use skr::harness::ablation;
+use skr::util::args::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    if let Err(e) = ablation::run(&args) {
+        eprintln!("bench ablation failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,13 @@
+//! `cargo bench --bench figures` — regenerates the data series behind the
+//! paper's Figures 1, 4/5, 7/8, 9/10, 11, 12 and 13 (CSV under results/).
+
+use skr::harness::figures;
+use skr::util::args::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    if let Err(e) = figures::run(&args) {
+        eprintln!("bench figures failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,93 @@
+//! `cargo bench --bench micro` — micro-benchmarks of the solver hot paths
+//! (SpMV, dot/axpy, MGS orthogonalization, preconditioner applies, one
+//! GMRES/GCRO-DR cycle, small-eig). These drive the §Perf optimization loop
+//! in EXPERIMENTS.md. Custom min-of-N harness (criterion unavailable
+//! offline).
+
+use skr::la::{dot, eig, Csr, ZMat};
+use skr::la::dense::Mat;
+use skr::pde::{generate, FamilyKind};
+use skr::precond::PrecondKind;
+use skr::solver::{gcrodr, gmres, Recycler, SolverConfig};
+use skr::util::prng::Rng;
+use skr::util::timer::best_of;
+
+fn report(name: &str, work: &str, secs: f64) {
+    println!("{name:<28} {:>12.3} µs   {work}", secs * 1e6);
+}
+
+fn main() {
+    let n = 10_000;
+    let fam = FamilyKind::Darcy.build(n);
+    let sys = &generate(fam.as_ref(), 1, 7).unwrap()[0];
+    let a: &Csr = &sys.a;
+    let mut rng = Rng::new(1);
+    let x = rng.normals(n);
+    let mut y = vec![0.0; n];
+
+    // --- BLAS-1/SpMV kernels ------------------------------------------------
+    let (_, t) = best_of(200, || a.matvec_into(&x, &mut y));
+    report("spmv 10k (5-pt)", &format!("{} nnz", a.nnz()), t);
+
+    let x2 = rng.normals(n);
+    let (_, t) = best_of(500, || dot(&x, &x2));
+    report("dot 10k", "", t);
+
+    let mut w = rng.normals(n);
+    let basis: Vec<Vec<f64>> = (0..30).map(|_| rng.normals(n)).collect();
+    let (_, t) = best_of(50, || {
+        let mut ww = w.clone();
+        skr::la::ortho::cgs2_orthogonalize(&mut ww, &basis);
+    });
+    w[0] += 0.0;
+    report("cgs2 vs 30 basis @10k", "", t);
+
+    // --- preconditioner applies ----------------------------------------------
+    for kind in [PrecondKind::Jacobi, PrecondKind::Sor, PrecondKind::Ilu, PrecondKind::Asm] {
+        let p = kind.build(a).unwrap();
+        let (_, t) = best_of(100, || p.apply(&x, &mut y));
+        report(&format!("precond {} @10k", kind.label()), "", t);
+    }
+
+    // --- small dense eig (the GCRO-DR per-cycle cost) -------------------------
+    for m in [20usize, 30, 40] {
+        let mut mm = Mat::zeros(m, m);
+        let mut r2 = Rng::new(2);
+        for v in &mut mm.data {
+            *v = r2.normal();
+        }
+        let z = ZMat::from_real(&mm);
+        let (_, t) = best_of(10, || {
+            let _ = eig::eig(&z).unwrap();
+        });
+        report(&format!("complex eig {m}x{m}"), "", t);
+    }
+
+    // --- full solves -----------------------------------------------------------
+    let cfg = SolverConfig::default().with_tol(1e-6);
+    let p = PrecondKind::Jacobi.build(a).unwrap();
+    let (_, t) = best_of(3, || {
+        let mut xx = vec![0.0; n];
+        gmres(a, &sys.b, &mut xx, p.as_ref(), &cfg);
+    });
+    report("gmres darcy 10k @1e-6", "", t);
+
+    let (_, t) = best_of(3, || {
+        let mut xx = vec![0.0; n];
+        let mut rec = Recycler::new();
+        gcrodr(a, &sys.b, &mut xx, p.as_ref(), &cfg, &mut rec);
+    });
+    report("gcrodr cold darcy 10k", "", t);
+
+    // Warm recycle: measure the second solve of an identical system.
+    let mut rec = Recycler::new();
+    let mut xx = vec![0.0; n];
+    gcrodr(a, &sys.b, &mut xx, p.as_ref(), &cfg, &mut rec);
+    let (_, t) = best_of(3, || {
+        let mut xw = vec![0.0; n];
+        // NOTE: clone the recycler so each reading starts from the same state.
+        let mut rc = rec.clone();
+        gcrodr(a, &sys.b, &mut xw, p.as_ref(), &cfg, &mut rc);
+    });
+    report("gcrodr warm darcy 10k", "", t);
+}

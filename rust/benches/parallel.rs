@@ -1,0 +1,13 @@
+//! `cargo bench --bench parallel` — regenerates the paper's Tables 31/32
+//! (threaded and block parallel variants).
+
+use skr::harness::parallel;
+use skr::util::args::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    if let Err(e) = parallel::run(&args) {
+        eprintln!("bench parallel failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench sweep_tables` — regenerates the paper's appendix
+//! Tables 3–30 (per-family size × tolerance × preconditioner sweeps).
+//! Default is a reduced grid; `-- --full` runs the paper's sizes.
+
+use skr::harness::sweeps;
+use skr::util::args::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    if let Err(e) = sweeps::run(&args) {
+        eprintln!("bench sweep_tables failed: {e:#}");
+        std::process::exit(1);
+    }
+}

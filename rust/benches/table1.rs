@@ -1,0 +1,15 @@
+//! `cargo bench --bench table1` — regenerates the paper's Table 1 at bench
+//! scale. (Custom harness: criterion is not available in the offline
+//! registry; the harness prints the paper-style table and writes CSV.)
+//! Pass `-- --full` for the paper's matrix sizes.
+
+use skr::harness::table1;
+use skr::util::args::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    if let Err(e) = table1::run(&args) {
+        eprintln!("bench table1 failed: {e:#}");
+        std::process::exit(1);
+    }
+}

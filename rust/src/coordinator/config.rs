@@ -1,0 +1,111 @@
+//! Pipeline configuration — the single source of truth wired from the CLI
+//! into every stage (generation, sorting, sharding, solving, export).
+
+use super::sorter::SortStrategy;
+use crate::pde::FamilyKind;
+use crate::precond::PrecondKind;
+use crate::solver::{Engine, SolverConfig};
+use crate::util::args::Args;
+use anyhow::Result;
+
+/// Full configuration of one data-generation run.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub family: FamilyKind,
+    /// Target unknowns per system (grid chosen to match).
+    pub unknowns: usize,
+    /// Number of PDE instances to generate.
+    pub count: usize,
+    pub engine: Engine,
+    pub precond: PrecondKind,
+    pub sort: SortStrategy,
+    pub solver: SolverConfig,
+    /// Worker threads for the solve stage (the paper's MPI-rank analogue).
+    pub threads: usize,
+    /// Bounded-queue depth between the solve and export stages
+    /// (backpressure: workers block when the writer falls behind).
+    pub queue_depth: usize,
+    pub seed: u64,
+    /// Output directory for the dataset (None = do not export).
+    pub out_dir: Option<std::path::PathBuf>,
+    /// Record the δ-subspace instrumentation (slower; ablation only).
+    pub instrument_delta: bool,
+    /// Override the GRF smoothness exponent α for GRF-driven families
+    /// (Darcy, Helmholtz). Larger α ⇒ smoother fields ⇒ lower effective
+    /// parameter dimension ⇒ closer sorted neighbours at a given sample
+    /// count (the ablation uses this at CI scale).
+    pub grf_alpha: Option<f64>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            family: FamilyKind::Darcy,
+            unknowns: 2500,
+            count: 64,
+            engine: Engine::SkrRecycle,
+            precond: PrecondKind::None,
+            sort: SortStrategy::Greedy,
+            solver: SolverConfig::default(),
+            threads: 1,
+            queue_depth: 64,
+            seed: 0,
+            out_dir: None,
+            instrument_delta: false,
+            grf_alpha: None,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Build from parsed CLI arguments (shared by `skr generate` and benches).
+    pub fn from_args(args: &Args) -> Result<PipelineConfig> {
+        let mut cfg = PipelineConfig {
+            family: FamilyKind::parse(&args.str_or("family", "darcy"))?,
+            unknowns: args.num_or("n", 2500usize),
+            count: args.num_or("count", 64usize),
+            engine: Engine::parse(&args.str_or("engine", "skr"))?,
+            precond: PrecondKind::parse(&args.str_or("precond", "none"))?,
+            sort: SortStrategy::parse(&args.str_or("sort", "greedy"))?,
+            threads: args.num_or("threads", 1usize).max(1),
+            queue_depth: args.num_or("queue-depth", 64usize).max(1),
+            seed: args.num_or("seed", 0u64),
+            out_dir: args.get("out").map(std::path::PathBuf::from),
+            instrument_delta: args.flag("delta"),
+            grf_alpha: args.get("grf-alpha").and_then(|v| v.parse().ok()),
+            solver: SolverConfig::default(),
+        };
+        cfg.solver.tol = args.num_or("tol", 1e-8f64);
+        cfg.solver.m = args.num_or("m", 30usize);
+        cfg.solver.k = args.num_or("k", 10usize);
+        cfg.solver.max_iters = args.num_or("max-iters", 10_000usize);
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_args_parses_everything() {
+        let args = Args::parse(
+            "generate --family helmholtz --n 400 --count 10 --engine gmres \
+             --precond sor --sort none --threads 4 --tol 1e-5 --m 40 --k 12 --seed 9"
+                .split_whitespace()
+                .map(|s| s.to_string()),
+        );
+        let cfg = PipelineConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.family, FamilyKind::Helmholtz);
+        assert_eq!(cfg.unknowns, 400);
+        assert_eq!(cfg.count, 10);
+        assert_eq!(cfg.engine, Engine::Gmres);
+        assert_eq!(cfg.precond, PrecondKind::Sor);
+        assert_eq!(cfg.sort, SortStrategy::None);
+        assert_eq!(cfg.threads, 4);
+        assert!((cfg.solver.tol - 1e-5).abs() < 1e-18);
+        assert_eq!(cfg.solver.m, 40);
+        assert_eq!(cfg.solver.k, 12);
+        assert_eq!(cfg.seed, 9);
+    }
+}

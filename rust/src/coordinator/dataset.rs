@@ -1,0 +1,145 @@
+//! Dataset assembly: collect (input field, solution) pairs indexed by their
+//! original stream id and export NumPy `.npy` arrays plus a JSON meta file —
+//! directly loadable by the python FNO pipeline and by `no::data`.
+
+use crate::util::json::Json;
+use crate::util::npy::{self, NpyArray};
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+/// In-memory accumulation buffer for a dataset being generated out of order.
+pub struct DatasetWriter {
+    dir: PathBuf,
+    count: usize,
+    input_dim: usize,
+    sol_dim: usize,
+    inputs: Vec<f64>,
+    solutions: Vec<f64>,
+    filled: Vec<bool>,
+    /// Grid side for reshaping on the python side (0 = unstructured).
+    field_side: usize,
+}
+
+/// What was written where.
+#[derive(Debug, Clone)]
+pub struct DatasetSummary {
+    pub dir: PathBuf,
+    pub count: usize,
+    pub input_dim: usize,
+    pub sol_dim: usize,
+}
+
+impl DatasetWriter {
+    pub fn new(dir: &Path, count: usize, input_dim: usize, sol_dim: usize, field_side: usize) -> DatasetWriter {
+        DatasetWriter {
+            dir: dir.to_path_buf(),
+            count,
+            input_dim,
+            sol_dim,
+            inputs: vec![0.0; count * input_dim],
+            solutions: vec![0.0; count * sol_dim],
+            filled: vec![false; count],
+            field_side,
+        }
+    }
+
+    /// Record sample `id` (original stream position).
+    pub fn put(&mut self, id: usize, input: &[f64], solution: &[f64]) -> Result<()> {
+        if id >= self.count {
+            bail!("sample id {id} out of range {}", self.count);
+        }
+        if input.len() != self.input_dim || solution.len() != self.sol_dim {
+            bail!(
+                "dim mismatch for id {id}: input {} (want {}), sol {} (want {})",
+                input.len(),
+                self.input_dim,
+                solution.len(),
+                self.sol_dim
+            );
+        }
+        if self.filled[id] {
+            bail!("sample id {id} written twice");
+        }
+        self.inputs[id * self.input_dim..(id + 1) * self.input_dim].copy_from_slice(input);
+        self.solutions[id * self.sol_dim..(id + 1) * self.sol_dim].copy_from_slice(solution);
+        self.filled[id] = true;
+        Ok(())
+    }
+
+    pub fn complete(&self) -> bool {
+        self.filled.iter().all(|&f| f)
+    }
+
+    /// Write `inputs.npy`, `solutions.npy` and `meta.json`.
+    pub fn finalize(self, family: &str, extra: Vec<(&str, Json)>) -> Result<DatasetSummary> {
+        if !self.complete() {
+            let missing = self.filled.iter().filter(|&&f| !f).count();
+            bail!("dataset incomplete: {missing} of {} samples missing", self.count);
+        }
+        std::fs::create_dir_all(&self.dir)?;
+        npy::write(
+            &self.dir.join("inputs.npy"),
+            &NpyArray::f64(vec![self.count, self.input_dim], self.inputs),
+        )?;
+        npy::write(
+            &self.dir.join("solutions.npy"),
+            &NpyArray::f64(vec![self.count, self.sol_dim], self.solutions),
+        )?;
+        let mut pairs = vec![
+            ("family", Json::Str(family.to_string())),
+            ("count", Json::Num(self.count as f64)),
+            ("input_dim", Json::Num(self.input_dim as f64)),
+            ("sol_dim", Json::Num(self.sol_dim as f64)),
+            ("field_side", Json::Num(self.field_side as f64)),
+        ];
+        pairs.extend(extra);
+        std::fs::write(self.dir.join("meta.json"), Json::obj(pairs).dump())?;
+        Ok(DatasetSummary {
+            dir: self.dir,
+            count: self.count,
+            input_dim: self.input_dim,
+            sol_dim: self.sol_dim,
+        })
+    }
+}
+
+/// Load a dataset written by [`DatasetWriter`] (used by the FNO trainer).
+pub fn load(dir: &Path) -> Result<(NpyArray, NpyArray, Json)> {
+    let inputs = npy::read(&dir.join("inputs.npy"))?;
+    let solutions = npy::read(&dir.join("solutions.npy"))?;
+    let meta = Json::parse(&std::fs::read_to_string(dir.join("meta.json"))?)?;
+    Ok((inputs, solutions, meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_out_of_order() {
+        let dir = std::env::temp_dir().join("skr_ds_test_1");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = DatasetWriter::new(&dir, 3, 2, 4, 2);
+        w.put(2, &[5.0, 6.0], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        w.put(0, &[1.0, 2.0], &[0.0; 4]).unwrap();
+        w.put(1, &[3.0, 4.0], &[9.0; 4]).unwrap();
+        assert!(w.complete());
+        let s = w.finalize("darcy", vec![]).unwrap();
+        assert_eq!(s.count, 3);
+        let (ins, sols, meta) = load(&dir).unwrap();
+        assert_eq!(ins.shape, vec![3, 2]);
+        assert_eq!(sols.shape, vec![3, 4]);
+        assert_eq!(&ins.data[4..6], &[5.0, 6.0]);
+        assert_eq!(meta.get("family").unwrap().as_str(), Some("darcy"));
+    }
+
+    #[test]
+    fn rejects_double_write_and_incomplete() {
+        let dir = std::env::temp_dir().join("skr_ds_test_2");
+        let mut w = DatasetWriter::new(&dir, 2, 1, 1, 0);
+        w.put(0, &[1.0], &[2.0]).unwrap();
+        assert!(w.put(0, &[1.0], &[2.0]).is_err());
+        assert!(w.put(5, &[1.0], &[2.0]).is_err());
+        assert!(w.finalize("x", vec![]).is_err());
+    }
+}

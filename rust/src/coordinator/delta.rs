@@ -1,0 +1,135 @@
+//! δ-subspace instrumentation (paper §5.1/§6.3): the one-sided distance
+//! δ(Q, C) = ‖(I − Π_C) Π_Q‖₂ between the recycle space C carried from
+//! system i and the space Q harvested from system i+1 — small δ predicts
+//! fast GCRO-DR convergence, and the ablation (Table 2) shows sorting
+//! lowers it.
+
+use crate::la::svd::{subspace_sin_max, subspace_sin_mean};
+use crate::la::Mat;
+
+/// Both flavours of the subspace distance between consecutive recycle
+/// spaces: `max` is the paper's spectral δ = ‖(I−Π_C)Π_Q‖₂ (the largest
+/// principal-angle sine, which saturates at 1 for k ≳ 5 in practice) and
+/// `mean` averages all k principal-angle sines — the discriminative variant
+/// the sort ablation reports alongside it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Delta {
+    pub max: f64,
+    pub mean: f64,
+}
+
+/// Orthonormalize columns and compute δ between consecutive recycle spaces.
+/// Inputs are column sets (each a length-n vector); returns None if either
+/// set is empty or degenerate.
+pub fn delta_between(c_prev: &[Vec<f64>], q_next: &[Vec<f64>]) -> Option<Delta> {
+    let ortho = |cols: &[Vec<f64>]| -> Option<Mat> {
+        if cols.is_empty() {
+            return None;
+        }
+        let n = cols[0].len();
+        let mut m = Mat::zeros(n, cols.len());
+        for (j, c) in cols.iter().enumerate() {
+            m.set_col(j, c);
+        }
+        let (q, r) = m.qr_thin();
+        // Degenerate if any diagonal collapses.
+        for i in 0..cols.len() {
+            if r[(i, i)].abs() < 1e-12 {
+                return None;
+            }
+        }
+        Some(q)
+    };
+    let c = ortho(c_prev)?;
+    let q = ortho(q_next)?;
+    Some(Delta { max: subspace_sin_max(&c, &q), mean: subspace_sin_mean(&c, &q) })
+}
+
+/// Running means of δ values observed along a sequence (both flavours).
+#[derive(Debug, Default, Clone)]
+pub struct DeltaTracker {
+    sum_max: f64,
+    sum_mean: f64,
+    count: usize,
+    values: Vec<Delta>,
+}
+
+impl DeltaTracker {
+    pub fn record(&mut self, delta: Delta) {
+        self.sum_max += delta.max;
+        self.sum_mean += delta.mean;
+        self.count += 1;
+        self.values.push(delta);
+    }
+
+    /// Sequence mean of the spectral δ (largest principal-angle sine).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_max / self.count as f64
+        }
+    }
+
+    /// Sequence mean of the mean-principal-angle δ (discriminative variant).
+    pub fn mean_of_means(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_mean / self.count as f64
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn values(&self) -> &[Delta] {
+        &self.values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn identical_spaces_have_zero_delta() {
+        let mut rng = Rng::new(1);
+        let cols: Vec<Vec<f64>> = (0..3).map(|_| rng.normals(20)).collect();
+        let d = delta_between(&cols, &cols).unwrap();
+        assert!(d.max < 1e-7, "{d:?}");
+        assert!(d.mean < 1e-7, "{d:?}");
+    }
+
+    #[test]
+    fn disjoint_spaces_have_delta_one() {
+        let mut a = vec![vec![0.0; 8]; 2];
+        a[0][0] = 1.0;
+        a[1][1] = 1.0;
+        let mut b = vec![vec![0.0; 8]; 2];
+        b[0][4] = 1.0;
+        b[1][5] = 1.0;
+        let d = delta_between(&a, &b).unwrap();
+        assert!((d.max - 1.0).abs() < 1e-12);
+        assert!((d.mean - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_degenerate_sets() {
+        let z = vec![vec![0.0; 4]; 2];
+        assert!(delta_between(&z, &z).is_none());
+        assert!(delta_between(&[], &[]).is_none());
+    }
+
+    #[test]
+    fn tracker_means() {
+        let mut t = DeltaTracker::default();
+        t.record(Delta { max: 0.5, mean: 0.25 });
+        t.record(Delta { max: 1.0, mean: 0.75 });
+        assert!((t.mean() - 0.75).abs() < 1e-15);
+        assert!((t.mean_of_means() - 0.5).abs() < 1e-15);
+        assert_eq!(t.count(), 2);
+    }
+}

@@ -1,0 +1,100 @@
+//! Aggregated run metrics — what the paper's tables report: mean per-system
+//! solve time, mean iteration count, max-iteration incidence, wall time.
+
+use crate::solver::{SolveStats, StopReason};
+
+/// Aggregate over a batch of per-system stats.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub systems: usize,
+    /// Sum of per-system solver seconds (excludes generation/sort).
+    pub solve_seconds: f64,
+    pub total_iters: usize,
+    /// Count of systems that hit the iteration cap (Fig. 13's metric).
+    pub max_iter_hits: usize,
+    pub breakdowns: usize,
+    /// End-to-end wall seconds for the whole pipeline run.
+    pub wall_seconds: f64,
+    /// Seconds spent in the sorting stage.
+    pub sort_seconds: f64,
+    /// Seconds spent generating/assembling systems.
+    pub gen_seconds: f64,
+}
+
+impl RunMetrics {
+    pub fn absorb(&mut self, s: &SolveStats) {
+        self.systems += 1;
+        self.solve_seconds += s.seconds;
+        self.total_iters += s.iters;
+        match s.stop {
+            StopReason::MaxIters => self.max_iter_hits += 1,
+            StopReason::Breakdown => self.breakdowns += 1,
+            StopReason::Converged => {}
+        }
+    }
+
+    /// Mean solve seconds per system.
+    pub fn mean_time(&self) -> f64 {
+        if self.systems == 0 {
+            0.0
+        } else {
+            self.solve_seconds / self.systems as f64
+        }
+    }
+
+    /// Mean iterations per system.
+    pub fn mean_iters(&self) -> f64 {
+        if self.systems == 0 {
+            0.0
+        } else {
+            self.total_iters as f64 / self.systems as f64
+        }
+    }
+
+    /// Fraction of systems that failed to converge within the cap.
+    pub fn max_iter_rate(&self) -> f64 {
+        if self.systems == 0 {
+            0.0
+        } else {
+            self.max_iter_hits as f64 / self.systems as f64
+        }
+    }
+
+    /// Merge two aggregates (for multi-worker reduction).
+    pub fn merge(&mut self, other: &RunMetrics) {
+        self.systems += other.systems;
+        self.solve_seconds += other.solve_seconds;
+        self.total_iters += other.total_iters;
+        self.max_iter_hits += other.max_iter_hits;
+        self.breakdowns += other.breakdowns;
+        self.wall_seconds = self.wall_seconds.max(other.wall_seconds);
+        self.sort_seconds += other.sort_seconds;
+        self.gen_seconds += other.gen_seconds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(iters: usize, secs: f64, stop: StopReason) -> SolveStats {
+        SolveStats { iters, seconds: secs, rel_residual: 0.0, stop, trace: vec![] }
+    }
+
+    #[test]
+    fn aggregates_and_merges() {
+        let mut m = RunMetrics::default();
+        m.absorb(&stat(10, 1.0, StopReason::Converged));
+        m.absorb(&stat(30, 3.0, StopReason::MaxIters));
+        assert_eq!(m.systems, 2);
+        assert!((m.mean_time() - 2.0).abs() < 1e-15);
+        assert!((m.mean_iters() - 20.0).abs() < 1e-15);
+        assert!((m.max_iter_rate() - 0.5).abs() < 1e-15);
+
+        let mut other = RunMetrics::default();
+        other.absorb(&stat(20, 2.0, StopReason::Converged));
+        m.merge(&other);
+        assert_eq!(m.systems, 3);
+        assert_eq!(m.total_iters, 60);
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator — the paper's system contribution: the streaming
+//! data-generation pipeline with similarity **sorting** and per-worker
+//! **Krylov recycling**, plus the scheduler, metrics, dataset assembly and
+//! the δ-subspace instrumentation behind the ablation study.
+
+pub mod config;
+pub mod dataset;
+pub mod delta;
+pub mod metrics;
+pub mod pipeline;
+pub mod scheduler;
+pub mod sorter;
+
+pub use config::PipelineConfig;
+pub use pipeline::{Pipeline, PipelineResult};
+pub use sorter::SortStrategy;

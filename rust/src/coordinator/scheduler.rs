@@ -1,0 +1,63 @@
+//! Batch scheduler: shard the *sorted* solve order into contiguous
+//! per-worker batches (the paper's Appendix E.2.2 parallel strategy — each
+//! MPI rank/thread receives a contiguous, internally-similar run of systems
+//! and recycles within it).
+
+/// Split `order` into `workers` contiguous batches of near-equal size.
+pub fn shard(order: &[usize], workers: usize) -> Vec<Vec<usize>> {
+    let workers = workers.clamp(1, order.len().max(1));
+    let n = order.len();
+    let base = n / workers;
+    let rem = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < rem);
+        out.push(order[start..start + len].to_vec());
+        start += len;
+    }
+    out
+}
+
+/// Interleaved sharding (round-robin) — the *wrong* strategy for recycling
+/// (it destroys consecutive similarity); kept as an ablation arm.
+pub fn shard_interleaved(order: &[usize], workers: usize) -> Vec<Vec<usize>> {
+    let workers = workers.clamp(1, order.len().max(1));
+    let mut out = vec![Vec::new(); workers];
+    for (i, &id) in order.iter().enumerate() {
+        out[i % workers].push(id);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_covers_all_once() {
+        let order: Vec<usize> = (0..17).rev().collect();
+        let shards = shard(&order, 4);
+        assert_eq!(shards.len(), 4);
+        let flat: Vec<usize> = shards.iter().flatten().copied().collect();
+        assert_eq!(flat, order);
+        // Sizes are near equal.
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert_eq!(sizes, vec![5, 4, 4, 4]);
+    }
+
+    #[test]
+    fn more_workers_than_items_clamps() {
+        let order = vec![1, 2];
+        let shards = shard(&order, 8);
+        assert_eq!(shards.len(), 2);
+    }
+
+    #[test]
+    fn interleaved_distributes_round_robin() {
+        let order: Vec<usize> = (0..6).collect();
+        let shards = shard_interleaved(&order, 2);
+        assert_eq!(shards[0], vec![0, 2, 4]);
+        assert_eq!(shards[1], vec![1, 3, 5]);
+    }
+}

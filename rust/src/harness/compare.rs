@@ -1,0 +1,56 @@
+//! `skr compare` — run the same configuration under GMRES and SKR and print
+//! the speedup pair; the smallest useful readout and the building block the
+//! table harnesses loop over.
+
+use super::{speedup, Speedup};
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::{Pipeline, PipelineConfig, SortStrategy};
+use crate::solver::Engine;
+use crate::util::args::Args;
+use anyhow::Result;
+
+/// Run one configuration under both engines; returns (gmres, skr) metrics.
+pub fn run_pair(base: &PipelineConfig) -> Result<(RunMetrics, RunMetrics)> {
+    let mut gm_cfg = base.clone();
+    gm_cfg.engine = Engine::Gmres;
+    gm_cfg.sort = SortStrategy::None; // the baseline solves in stream order
+    gm_cfg.out_dir = None;
+    let gm = Pipeline::new(gm_cfg).run()?.metrics;
+
+    let mut skr_cfg = base.clone();
+    skr_cfg.engine = Engine::SkrRecycle;
+    skr_cfg.out_dir = None;
+    let skr = Pipeline::new(skr_cfg).run()?.metrics;
+    Ok((gm, skr))
+}
+
+/// CLI entry.
+pub fn run(args: &Args) -> Result<()> {
+    let cfg = PipelineConfig::from_args(args)?;
+    let (gm, skr) = run_pair(&cfg)?;
+    let sp: Speedup = speedup(&gm, &skr);
+    println!(
+        "config: family={} n={} count={} precond={} tol={:.0e} m={} k={}",
+        cfg.family.label(),
+        cfg.unknowns,
+        cfg.count,
+        cfg.precond.label(),
+        cfg.solver.tol,
+        cfg.solver.m,
+        cfg.solver.k
+    );
+    println!(
+        "GMRES : mean {:.4}s  {:.1} iters/sys  ({} max-iter hits)",
+        gm.mean_time(),
+        gm.mean_iters(),
+        gm.max_iter_hits
+    );
+    println!(
+        "SKR   : mean {:.4}s  {:.1} iters/sys  ({} max-iter hits)",
+        skr.mean_time(),
+        skr.mean_iters(),
+        skr.max_iter_hits
+    );
+    println!("speedup (GMRES/SKR): time {:.2}x  iters {:.2}x", sp.time, sp.iters);
+    Ok(())
+}

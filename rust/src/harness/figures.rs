@@ -1,0 +1,294 @@
+//! Paper figure reproductions — each emits the data series behind a figure
+//! as CSV (plus a printed summary), since the container has no plotting:
+//!
+//! * `conv`       — Fig 1 (right): accuracy-vs-time/iterations curves.
+//! * `similarity` — Figs 4/5 and 9/10: solution distance vs parameter
+//!   distance for close and divergent parameter pairs (Darcy + Helmholtz).
+//! * `sortpairs`  — Figs 7/8: neighbour solution distance before/after sort.
+//! * `f11`/`f12`  — Figs 11/12: per-preconditioner convergence curves and
+//!   the high-precision slope fits.
+//! * `f13`        — Fig 13: fraction of solves hitting the iteration cap.
+
+use super::results_dir;
+use crate::coordinator::sorter::{dist2, sort_order, SortStrategy};
+use crate::coordinator::{Pipeline, PipelineConfig};
+use crate::pde::{generate, FamilyKind};
+use crate::precond::PrecondKind;
+use crate::solver::{solve_sequence, Engine, SolverConfig};
+use crate::util::args::Args;
+use crate::util::table::Table;
+use crate::util::{mean, ols_slope};
+use anyhow::Result;
+
+/// CLI entry.
+pub fn run(args: &Args) -> Result<()> {
+    let which = args.str_or("fig", "all");
+    let full = args.flag("full");
+    let n = args.num_or("n", if full { 10_000 } else { 1600 });
+    let count = args.num_or("count", if full { 50 } else { 12 });
+    let seed = args.num_or("seed", 0u64);
+    if matches!(which.as_str(), "all" | "conv") {
+        fig_conv(n, count, seed)?;
+    }
+    if matches!(which.as_str(), "all" | "similarity") {
+        fig_similarity(n.min(2500), count.max(16), seed)?;
+    }
+    if matches!(which.as_str(), "all" | "sortpairs") {
+        fig_sortpairs(n.min(2500), count.max(16), seed)?;
+    }
+    if matches!(which.as_str(), "all" | "f11" | "f12") {
+        fig_11_12(n, count, seed)?;
+    }
+    if matches!(which.as_str(), "all" | "f13") {
+        fig_13(n, count, seed)?;
+    }
+    Ok(())
+}
+
+/// Fig 1 (right): residual trace (accuracy vs estimated time and iters).
+pub fn fig_conv(n: usize, count: usize, seed: u64) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 1 (right) — accuracy vs cumulative cost (Darcy, Jacobi)",
+        &["engine", "system", "iters", "est_seconds", "rel_residual"],
+    );
+    for engine in [Engine::Gmres, Engine::SkrRecycle] {
+        let mut cfg = PipelineConfig::default();
+        cfg.family = FamilyKind::Darcy;
+        cfg.unknowns = n;
+        cfg.count = count;
+        cfg.precond = PrecondKind::Jacobi;
+        cfg.engine = engine;
+        cfg.sort = if engine == Engine::SkrRecycle { SortStrategy::Greedy } else { SortStrategy::None };
+        cfg.solver.tol = 1e-8;
+        cfg.solver.record_trace = true;
+        cfg.seed = seed;
+        let r = Pipeline::new(cfg).run()?;
+        for (sys_id, stats) in &r.per_system {
+            let per_iter = if stats.iters > 0 { stats.seconds / stats.iters as f64 } else { 0.0 };
+            for &(it, rel) in &stats.trace {
+                t.row(vec![
+                    engine.label().to_string(),
+                    sys_id.to_string(),
+                    it.to_string(),
+                    format!("{:.6}", it as f64 * per_iter),
+                    format!("{rel:.3e}"),
+                ]);
+            }
+        }
+        println!(
+            "fig1[{}]: mean {:.4}s/system, {:.0} iters/system",
+            engine.label(),
+            r.metrics.mean_time(),
+            r.metrics.mean_iters()
+        );
+    }
+    t.write_csv(&results_dir().join("fig1_convergence.csv"))?;
+    println!("→ results/fig1_convergence.csv");
+    Ok(())
+}
+
+/// Figs 4/5 + 9/10: parameter distance vs solution distance.
+pub fn fig_similarity(n: usize, count: usize, seed: u64) -> Result<()> {
+    let mut t = Table::new(
+        "Figs 4/5, 9/10 — parameter vs solution distance",
+        &["family", "pair", "param_dist", "solution_dist"],
+    );
+    for family in [FamilyKind::Darcy, FamilyKind::Helmholtz] {
+        let fam = family.build(n);
+        let systems = generate(fam.as_ref(), count, seed)?;
+        let cfg = SolverConfig::default().with_tol(1e-8);
+        let sols = solve_sequence(&systems, Engine::SkrRecycle, PrecondKind::Jacobi, &cfg)?;
+        // All pairs (count is small): param distance vs solution distance.
+        let mut pairs: Vec<(f64, f64)> = Vec::new();
+        for i in 0..count {
+            for j in i + 1..count {
+                let pd = dist2(&systems[i].params, &systems[j].params).sqrt();
+                let sd: f64 = sols[i]
+                    .0
+                    .iter()
+                    .zip(&sols[j].0)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                pairs.push((pd, sd));
+                t.row(vec![
+                    family.label().to_string(),
+                    format!("{i}-{j}"),
+                    format!("{pd:.4}"),
+                    format!("{sd:.4}"),
+                ]);
+            }
+        }
+        // Pearson correlation — the figures' qualitative claim.
+        let (xs, ys): (Vec<f64>, Vec<f64>) = pairs.iter().copied().unzip();
+        let r = pearson(&xs, &ys);
+        let closest = pairs.iter().cloned().fold((f64::INFINITY, 0.0), |a, b| if b.0 < a.0 { b } else { a });
+        let farthest = pairs.iter().cloned().fold((f64::NEG_INFINITY, 0.0), |a, b| if b.0 > a.0 { b } else { a });
+        println!(
+            "{}: corr(param dist, solution dist) = {r:.3}; closest pair Δsol={:.3}, farthest Δsol={:.3}",
+            family.label(),
+            closest.1,
+            farthest.1
+        );
+    }
+    t.write_csv(&results_dir().join("fig4_5_9_10_similarity.csv"))?;
+    println!("→ results/fig4_5_9_10_similarity.csv");
+    Ok(())
+}
+
+/// Figs 7/8: consecutive-pair solution distance before vs after sorting.
+pub fn fig_sortpairs(n: usize, count: usize, seed: u64) -> Result<()> {
+    let fam = FamilyKind::Poisson.build(n);
+    let systems = generate(fam.as_ref(), count, seed)?;
+    let cfg = SolverConfig::default().with_tol(1e-8);
+    let sols = solve_sequence(&systems, Engine::SkrRecycle, PrecondKind::Jacobi, &cfg)?;
+    let params: Vec<Vec<f64>> = systems.iter().map(|s| s.params.clone()).collect();
+    let sol_dist = |i: usize, j: usize| -> f64 {
+        sols[i].0.iter().zip(&sols[j].0).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt()
+    };
+    let chain = |order: &[usize]| -> Vec<f64> {
+        order.windows(2).map(|w| sol_dist(w[0], w[1])).collect()
+    };
+    let unsorted: Vec<usize> = (0..count).collect();
+    let sorted = sort_order(&params, SortStrategy::Greedy, seed);
+    let before = chain(&unsorted);
+    let after = chain(&sorted);
+
+    let mut t = Table::new(
+        "Figs 7/8 — neighbour solution distance (Poisson)",
+        &["order", "pair_index", "solution_dist"],
+    );
+    for (i, d) in before.iter().enumerate() {
+        t.row(vec!["unsorted".into(), i.to_string(), format!("{d:.4}")]);
+    }
+    for (i, d) in after.iter().enumerate() {
+        t.row(vec!["sorted".into(), i.to_string(), format!("{d:.4}")]);
+    }
+    t.write_csv(&results_dir().join("fig7_8_sortpairs.csv"))?;
+    println!(
+        "Poisson neighbour Δsol: unsorted mean {:.4} → sorted mean {:.4} (−{:.0}%)",
+        mean(&before),
+        mean(&after),
+        (1.0 - mean(&after) / mean(&before)) * 100.0
+    );
+    println!("→ results/fig7_8_sortpairs.csv");
+    Ok(())
+}
+
+/// Figs 11/12: accuracy-vs-cost curves per preconditioner + slope fits.
+pub fn fig_11_12(n: usize, count: usize, seed: u64) -> Result<()> {
+    let tols = [1e-2, 1e-3, 1e-4, 1e-5, 1e-6, 1e-7];
+    let preconds = [PrecondKind::None, PrecondKind::Jacobi, PrecondKind::Sor, PrecondKind::Ilu];
+    let mut t = Table::new(
+        "Figs 11/12 — Helmholtz accuracy vs mean cost",
+        &["precond", "engine", "tol", "mean_seconds", "mean_iters"],
+    );
+    let mut slopes = Table::new(
+        "Figs 11/12 (right) — high-precision slope fits (3 tightest tols)",
+        &["precond", "engine", "slope_time", "slope_iters"],
+    );
+    for precond in preconds {
+        for engine in [Engine::Gmres, Engine::SkrRecycle] {
+            let mut times = Vec::new();
+            let mut iters = Vec::new();
+            for &tol in &tols {
+                let mut cfg = PipelineConfig::default();
+                cfg.family = FamilyKind::Helmholtz;
+                cfg.unknowns = n;
+                cfg.count = count;
+                cfg.precond = precond;
+                cfg.engine = engine;
+                cfg.sort = if engine == Engine::SkrRecycle {
+                    SortStrategy::Greedy
+                } else {
+                    SortStrategy::None
+                };
+                cfg.solver.tol = tol;
+                cfg.seed = seed;
+                let r = Pipeline::new(cfg).run()?;
+                times.push(r.metrics.mean_time());
+                iters.push(r.metrics.mean_iters());
+                t.row(vec![
+                    precond.label().into(),
+                    engine.label().into(),
+                    format!("{tol:.0e}"),
+                    format!("{:.4}", r.metrics.mean_time()),
+                    format!("{:.1}", r.metrics.mean_iters()),
+                ]);
+            }
+            // Slope of log10(accuracy) against cost over the 3 tightest tols
+            // (the paper's linear fit isolating the superlinear phase).
+            let logacc: Vec<f64> = tols.iter().map(|t| t.log10()).collect();
+            let k = tols.len() - 3;
+            let st = ols_slope(&times[k..], &logacc[k..]);
+            let si = ols_slope(&iters[k..], &logacc[k..]);
+            slopes.row(vec![
+                precond.label().into(),
+                engine.label().into(),
+                format!("{st:.3}"),
+                format!("{si:.5}"),
+            ]);
+            println!(
+                "f11/12 [{} {}]: slope_time {st:.3} dec/s, slope_iters {si:.5} dec/iter",
+                precond.label(),
+                engine.label()
+            );
+        }
+    }
+    t.write_csv(&results_dir().join("fig11_12_curves.csv"))?;
+    slopes.write_csv(&results_dir().join("fig11_12_slopes.csv"))?;
+    print!("{}", slopes.render());
+    println!("→ results/fig11_12_curves.csv, results/fig11_12_slopes.csv");
+    Ok(())
+}
+
+/// Fig 13: fraction of solves hitting the iteration cap.
+pub fn fig_13(n: usize, count: usize, seed: u64) -> Result<()> {
+    let tols = [1e-2, 1e-4, 1e-6, 1e-8];
+    // A deliberately tight cap puts the baseline under stress, as in the
+    // paper (cap 10⁴ at n 10⁴; scaled down with n here).
+    let cap = (n / 2).max(500);
+    let mut t = Table::new(
+        &format!("Fig 13 — fraction of solves hitting the {cap}-iteration cap (Darcy)"),
+        &["tol", "GMRES_frac", "SKR_frac"],
+    );
+    for &tol in &tols {
+        let mut fracs = Vec::new();
+        for engine in [Engine::Gmres, Engine::SkrRecycle] {
+            let mut cfg = PipelineConfig::default();
+            cfg.family = FamilyKind::Darcy;
+            cfg.unknowns = n;
+            cfg.count = count;
+            cfg.precond = PrecondKind::Jacobi;
+            cfg.engine = engine;
+            cfg.sort = if engine == Engine::SkrRecycle {
+                SortStrategy::Greedy
+            } else {
+                SortStrategy::None
+            };
+            cfg.solver.tol = tol;
+            cfg.solver.max_iters = cap;
+            cfg.seed = seed;
+            let r = Pipeline::new(cfg).run()?;
+            fracs.push(r.metrics.max_iter_rate());
+        }
+        println!("f13 tol={tol:.0e}: GMRES {:.0}% vs SKR {:.0}%", fracs[0] * 100.0, fracs[1] * 100.0);
+        t.row(vec![format!("{tol:.0e}"), format!("{:.3}", fracs[0]), format!("{:.3}", fracs[1])]);
+    }
+    t.write_csv(&results_dir().join("fig13_stability.csv"))?;
+    println!("→ results/fig13_stability.csv");
+    Ok(())
+}
+
+fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    let mx = mean(x);
+    let my = mean(y);
+    let cov: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let vx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    let vy: f64 = y.iter().map(|b| (b - my) * (b - my)).sum();
+    if vx == 0.0 || vy == 0.0 {
+        0.0
+    } else {
+        cov / (vx * vy).sqrt()
+    }
+}

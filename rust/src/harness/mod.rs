@@ -1,0 +1,58 @@
+//! Experiment harnesses — one module per paper artifact. Shared between the
+//! `skr` CLI subcommands and the `cargo bench` targets so every table and
+//! figure can be regenerated from either entry point. Each harness prints
+//! paper-style rows and mirrors them to CSV under `results/`.
+
+pub mod ablation;
+pub mod compare;
+pub mod figures;
+pub mod parallel;
+pub mod sweeps;
+pub mod table1;
+pub mod train;
+pub mod validate;
+
+use crate::coordinator::metrics::RunMetrics;
+
+/// A (time speedup, iteration speedup) pair — the paper's table cell.
+#[derive(Debug, Clone, Copy)]
+pub struct Speedup {
+    pub time: f64,
+    pub iters: f64,
+}
+
+/// Compute GMRES/SKR ratios (>1 ⇒ SKR wins) from two aggregates.
+pub fn speedup(gmres: &RunMetrics, skr: &RunMetrics) -> Speedup {
+    let ratio = |a: f64, b: f64| if b > 0.0 { a / b } else { f64::NAN };
+    Speedup {
+        time: ratio(gmres.mean_time(), skr.mean_time()),
+        iters: ratio(gmres.mean_iters(), skr.mean_iters()),
+    }
+}
+
+/// Results directory (created on demand).
+pub fn results_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_ratios() {
+        let mut g = RunMetrics::default();
+        g.systems = 2;
+        g.solve_seconds = 4.0;
+        g.total_iters = 200;
+        let mut s = RunMetrics::default();
+        s.systems = 2;
+        s.solve_seconds = 1.0;
+        s.total_iters = 20;
+        let sp = speedup(&g, &s);
+        assert!((sp.time - 4.0).abs() < 1e-12);
+        assert!((sp.iters - 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,136 @@
+//! Paper **Tables 3–30** — the full per-family sweep: for each dataset and
+//! preconditioner, a size × tolerance grid reporting mean time and mean
+//! iterations for both engines (the paper's detailed appendix tables).
+
+use super::compare::run_pair;
+use super::results_dir;
+use crate::coordinator::PipelineConfig;
+use crate::pde::FamilyKind;
+use crate::precond::PrecondKind;
+use crate::util::args::Args;
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// Sweep grid per family (sizes, tolerances).
+pub fn sweep_plan(family: FamilyKind, full: bool) -> (Vec<usize>, Vec<f64>) {
+    match (family, full) {
+        (FamilyKind::Darcy, true) => {
+            (vec![2500, 6400, 10000, 22500, 40000], vec![1e-1, 1e-2, 1e-4, 1e-6, 1e-8])
+        }
+        (FamilyKind::Darcy, false) => (vec![900, 1600], vec![1e-2, 1e-5, 1e-8]),
+        (FamilyKind::Thermal, true) => {
+            (vec![2755, 7821, 11063, 17593, 31157], vec![1e-5, 1e-7, 1e-9, 1e-11])
+        }
+        (FamilyKind::Thermal, false) => (vec![900, 1600], vec![1e-5, 1e-8, 1e-11]),
+        (FamilyKind::Poisson, true) => {
+            (vec![7153, 11237, 20245, 45337, 71313], vec![1e-5, 1e-7, 1e-9, 1e-11])
+        }
+        (FamilyKind::Poisson, false) => (vec![1600, 2500], vec![1e-5, 1e-8, 1e-11]),
+        (FamilyKind::Helmholtz, true) => {
+            (vec![2500, 6400, 10000, 22500], vec![1e-1, 1e-2, 1e-4, 1e-6, 1e-7])
+        }
+        (FamilyKind::Helmholtz, false) => (vec![900, 1600], vec![1e-2, 1e-5, 1e-7]),
+    }
+}
+
+/// Run the sweep for one family × preconditioner; returns the paper-style
+/// table (time block then iter block).
+pub fn sweep_table(
+    family: FamilyKind,
+    precond: PrecondKind,
+    count: usize,
+    full: bool,
+    seed: u64,
+) -> Result<Table> {
+    let (sizes, tols) = sweep_plan(family, full);
+    let mut header: Vec<String> = vec!["metric".into(), "n".into(), "solver".into()];
+    header.extend(tols.iter().map(|t| format!("{t:.0e}")));
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        &format!("{} / {} — GMRES vs SKR (mean per-system)", family.label(), precond.label()),
+        &hdr_refs,
+    );
+
+    // metric → n → (gmres cells, skr cells)
+    let mut time_rows = Vec::new();
+    let mut iter_rows = Vec::new();
+    for &n in &sizes {
+        let mut gm_t = Vec::new();
+        let mut skr_t = Vec::new();
+        let mut gm_i = Vec::new();
+        let mut skr_i = Vec::new();
+        for &tol in &tols {
+            let mut cfg = PipelineConfig::default();
+            cfg.family = family;
+            cfg.unknowns = n;
+            cfg.count = count;
+            cfg.precond = precond;
+            cfg.solver.tol = tol;
+            cfg.threads = 1;
+            cfg.seed = seed;
+            let (gm, skr) = run_pair(&cfg)?;
+            gm_t.push(format!("{:.4}", gm.mean_time()));
+            skr_t.push(format!("{:.4}", skr.mean_time()));
+            gm_i.push(format!("{:.0}", gm.mean_iters()));
+            skr_i.push(format!("{:.0}", skr.mean_iters()));
+            eprintln!(
+                "  [{} {} n={n} tol={tol:.0e}] GMRES {:.4}s/{:.0}  SKR {:.4}s/{:.0}",
+                family.label(),
+                precond.label(),
+                gm.mean_time(),
+                gm.mean_iters(),
+                skr.mean_time(),
+                skr.mean_iters()
+            );
+        }
+        time_rows.push((n, gm_t, skr_t));
+        iter_rows.push((n, gm_i, skr_i));
+    }
+    for (n, gm, skr) in time_rows {
+        let mut r1 = vec!["time".to_string(), n.to_string(), "GMRES".to_string()];
+        r1.extend(gm);
+        table.row(r1);
+        let mut r2 = vec![String::new(), String::new(), "SKR".to_string()];
+        r2.extend(skr);
+        table.row(r2);
+    }
+    for (n, gm, skr) in iter_rows {
+        let mut r1 = vec!["iter".to_string(), n.to_string(), "GMRES".to_string()];
+        r1.extend(gm);
+        table.row(r1);
+        let mut r2 = vec![String::new(), String::new(), "SKR".to_string()];
+        r2.extend(skr);
+        table.row(r2);
+    }
+    Ok(table)
+}
+
+/// CLI entry: `skr tables [--family F] [--precond P] [--full]`.
+pub fn run(args: &Args) -> Result<()> {
+    let full = args.flag("full");
+    let count = args.num_or("count", if full { 50 } else { 8 });
+    let families: Vec<FamilyKind> = match args.get("family") {
+        Some(f) => vec![FamilyKind::parse(f)?],
+        None => FamilyKind::ALL.to_vec(),
+    };
+    let preconds: Vec<PrecondKind> = match args.get("precond") {
+        Some(p) => vec![PrecondKind::parse(p)?],
+        None if full => PrecondKind::ALL.to_vec(),
+        None => vec![PrecondKind::None, PrecondKind::Jacobi, PrecondKind::Ilu],
+    };
+    for family in families {
+        for &precond in &preconds {
+            let t = sweep_table(family, precond, count, full, args.num_or("seed", 0u64))?;
+            print!("{}", t.render());
+            println!();
+            let name = format!(
+                "sweep_{}_{}.csv",
+                family.label().to_lowercase(),
+                precond.label().to_lowercase()
+            );
+            t.write_csv(&results_dir().join(name))?;
+        }
+    }
+    println!("CSVs → results/sweep_*.csv");
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Paper **Table 1** — the headline result: SKR vs GMRES computation-time
+//! and iteration speedups across the four datasets, seven preconditioners
+//! and three tolerances per dataset.
+//!
+//! Cells are printed as `time×/iters×` exactly like the paper. Default
+//! sizes are reduced so the sweep completes in CI time; `--full` runs the
+//! paper's matrix sizes (2500–71313 unknowns).
+
+use super::compare::run_pair;
+use super::results_dir;
+use crate::coordinator::PipelineConfig;
+use crate::pde::FamilyKind;
+use crate::precond::PrecondKind;
+use crate::util::args::Args;
+use crate::util::table::{ratio_cell, Table};
+use anyhow::Result;
+
+/// Per-family scales and tolerance triples (paper Table 1 rows).
+pub fn family_plan(full: bool) -> Vec<(FamilyKind, usize, [f64; 3])> {
+    if full {
+        vec![
+            (FamilyKind::Darcy, 6400, [1e-2, 1e-5, 1e-8]),
+            (FamilyKind::Thermal, 11063, [1e-5, 1e-8, 1e-11]),
+            (FamilyKind::Poisson, 71313, [1e-5, 1e-8, 1e-11]),
+            (FamilyKind::Helmholtz, 10000, [1e-2, 1e-5, 1e-7]),
+        ]
+    } else {
+        vec![
+            (FamilyKind::Darcy, 1600, [1e-2, 1e-5, 1e-8]),
+            (FamilyKind::Thermal, 1600, [1e-5, 1e-8, 1e-11]),
+            (FamilyKind::Poisson, 2500, [1e-5, 1e-8, 1e-11]),
+            (FamilyKind::Helmholtz, 1600, [1e-2, 1e-5, 1e-7]),
+        ]
+    }
+}
+
+/// Run the Table-1 grid; returns the rendered table for logging.
+pub fn run_with(count: usize, full: bool, preconds: &[PrecondKind], seed: u64) -> Result<Table> {
+    let mut header: Vec<&str> = vec!["Dataset", "tol"];
+    let labels: Vec<String> = preconds.iter().map(|p| p.label().to_string()).collect();
+    header.extend(labels.iter().map(|s| s.as_str()));
+    let mut table = Table::new(
+        "Table 1 — GMRES/SKR speedup: time x / iters x (>1 means SKR wins)",
+        &header,
+    );
+
+    for (family, unknowns, tols) in family_plan(full) {
+        for (ti, &tol) in tols.iter().enumerate() {
+            let mut row = vec![
+                if ti == 0 { format!("{} ({unknowns})", family.label()) } else { String::new() },
+                format!("{tol:.0e}"),
+            ];
+            for &precond in preconds {
+                let mut cfg = PipelineConfig::default();
+                cfg.family = family;
+                cfg.unknowns = unknowns;
+                cfg.count = count;
+                cfg.precond = precond;
+                cfg.solver.tol = tol;
+                cfg.seed = seed;
+                cfg.threads = 1;
+                let (gm, skr) = run_pair(&cfg)?;
+                let sp = super::speedup(&gm, &skr);
+                row.push(ratio_cell(sp.time, sp.iters));
+                eprintln!(
+                    "  [{} n={} tol={tol:.0e} {}] GMRES {:.4}s/{:.0}it  SKR {:.4}s/{:.0}it  => {}",
+                    family.label(),
+                    unknowns,
+                    precond.label(),
+                    gm.mean_time(),
+                    gm.mean_iters(),
+                    skr.mean_time(),
+                    skr.mean_iters(),
+                    ratio_cell(sp.time, sp.iters),
+                );
+            }
+            table.row(row);
+        }
+    }
+    Ok(table)
+}
+
+/// CLI entry.
+pub fn run(args: &Args) -> Result<()> {
+    let full = args.flag("full");
+    let count = args.num_or("count", if full { 100 } else { 10 });
+    let preconds: Vec<PrecondKind> = if args.flag("quick") {
+        vec![PrecondKind::None, PrecondKind::Jacobi, PrecondKind::Ilu]
+    } else {
+        PrecondKind::ALL.to_vec()
+    };
+    let table = run_with(count, full, &preconds, args.num_or("seed", 0u64))?;
+    print!("{}", table.render());
+    table.write_csv(&results_dir().join("table1.csv"))?;
+    println!("\nCSV → results/table1.csv");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! `skr train` — train the AOT-compiled FNO on a generated dataset through
+//! the PJRT runtime, logging the loss curve (the "NO consumes the data the
+//! pipeline produced" leg of the system).
+
+use crate::no::{FnoDataset, Trainer};
+use crate::runtime::{FnoRuntime, Manifest};
+use crate::util::args::Args;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// CLI entry.
+pub fn run(args: &Args) -> Result<()> {
+    let data_dir = PathBuf::from(
+        args.get("data").context("--data DIR required (a `skr generate --out DIR` export)")?,
+    );
+    let art_dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    let steps = args.num_or("steps", 300usize);
+
+    let mut fno = FnoRuntime::load(&art_dir)?;
+    println!(
+        "FNO loaded: grid={} batch={} width={} modes={} layers={} ({} weights)",
+        fno.manifest.grid,
+        fno.manifest.batch,
+        fno.manifest.width,
+        fno.manifest.modes,
+        fno.manifest.layers,
+        fno.manifest.num_weights()
+    );
+    let ds = FnoDataset::load(&data_dir, fno.manifest.grid, 0.2, args.num_or("seed", 0u64))?;
+    println!(
+        "dataset: {} samples ({} train / {} test), grid {}",
+        ds.count,
+        ds.train_idx.len(),
+        ds.test_idx.len(),
+        ds.grid
+    );
+
+    let trainer = Trainer { steps, eval_every: (steps / 6).max(1), seed: 1, log: true };
+    let report = trainer.train(&mut fno, &ds)?;
+    println!(
+        "trained {} steps in {:.1}s — final test rel-L2 {:.4}",
+        report.steps, report.seconds, report.final_test_rel_l2
+    );
+
+    // Mirror the loss curve to CSV for plotting.
+    let mut t = crate::util::table::Table::new("loss curve", &["step", "train_loss"]);
+    for (s, l) in &report.losses {
+        t.row(vec![s.to_string(), format!("{l:.6}")]);
+    }
+    let csv = super::results_dir().join("train_loss_curve.csv");
+    t.write_csv(&csv)?;
+    println!("loss curve → {}", csv.display());
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! `skr validate` — paper Table 33 (dataset-validity): generate the same
+//! Darcy dataset twice, once solved by GMRES and once by SKR, train the
+//! same FNO on each, and show the training dynamics coincide — i.e. the
+//! accelerated pipeline changes nothing for the downstream neural operator.
+
+use crate::coordinator::{Pipeline, PipelineConfig, SortStrategy};
+use crate::no::{FnoDataset, Trainer};
+use crate::runtime::{FnoRuntime, Manifest};
+use crate::solver::Engine;
+use crate::util::args::Args;
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// Table-33 analogue outcome, returned for tests/benches.
+#[derive(Debug, Clone)]
+pub struct ValidityReport {
+    /// (label, test-error curve at eval points).
+    pub curves: Vec<(String, Vec<(usize, f64)>)>,
+    pub final_errors: Vec<(String, f64)>,
+}
+
+/// Run the experiment at a given scale.
+pub fn run_experiment(
+    count: usize,
+    unknowns: usize,
+    steps: usize,
+    seed: u64,
+) -> Result<ValidityReport> {
+    let art_dir = Manifest::default_dir();
+    let mut curves = Vec::new();
+    let mut final_errors = Vec::new();
+
+    for (label, engine) in [("GMRES", Engine::Gmres), ("SKR", Engine::SkrRecycle)] {
+        let dir = std::env::temp_dir().join(format!("skr_validate_{}", label.to_lowercase()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = PipelineConfig::default();
+        cfg.unknowns = unknowns;
+        cfg.count = count;
+        cfg.engine = engine;
+        cfg.sort = if engine == Engine::SkrRecycle { SortStrategy::Greedy } else { SortStrategy::None };
+        cfg.solver.tol = 1e-8;
+        cfg.threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2);
+        cfg.seed = seed;
+        cfg.out_dir = Some(dir.clone());
+        let r = Pipeline::new(cfg).run()?;
+        println!(
+            "{label}: generated {count} systems, mean {:.1} iters, {:.2}s solve",
+            r.metrics.mean_iters(),
+            r.metrics.solve_seconds
+        );
+
+        // Both runs must train the *same* model from the same init.
+        let mut fno = FnoRuntime::load(&art_dir)?;
+        let ds = FnoDataset::load(&dir, fno.manifest.grid, 0.2, 7)?;
+        let trainer = Trainer { steps, eval_every: (steps / 5).max(1), seed: 11, log: false };
+        let report = trainer.train(&mut fno, &ds)?;
+        println!("{label}: final test rel-L2 {:.4}", report.final_test_rel_l2);
+        curves.push((label.to_string(), report.test_curve.clone()));
+        final_errors.push((label.to_string(), report.final_test_rel_l2));
+    }
+    Ok(ValidityReport { curves, final_errors })
+}
+
+/// CLI entry.
+pub fn run(args: &Args) -> Result<()> {
+    let full = args.flag("full");
+    let count = args.num_or("count", if full { 1024 } else { 96 });
+    let unknowns = args.num_or("n", if full { 2500 } else { 1024 });
+    let steps = args.num_or("steps", if full { 500 } else { 150 });
+    let rep = run_experiment(count, unknowns, steps, args.num_or("seed", 0u64))?;
+
+    let mut t = Table::new(
+        "Table 33 — FNO test rel-L2 when trained on GMRES- vs SKR-generated data",
+        &["engine", "eval@", "rel-L2"],
+    );
+    for (label, curve) in &rep.curves {
+        for (step, err) in curve {
+            t.row(vec![label.clone(), step.to_string(), format!("{err:.4}")]);
+        }
+    }
+    print!("{}", t.render());
+    t.write_csv(&super::results_dir().join("table33_validity.csv"))?;
+
+    let (g, s) = (rep.final_errors[0].1, rep.final_errors[1].1);
+    let gap = (g - s).abs() / g.max(s).max(1e-12);
+    println!("\nfinal errors: GMRES {g:.4} vs SKR {s:.4} (relative gap {:.1}%)", gap * 100.0);
+    if gap < 0.15 {
+        println!("=> datasets are training-equivalent (paper Table 33 conclusion holds)");
+    } else {
+        println!("=> WARNING: gap exceeds 15% — inspect the runs");
+    }
+    Ok(())
+}

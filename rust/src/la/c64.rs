@@ -1,0 +1,161 @@
+//! Complex double-precision scalar (`num-complex` is not in the offline
+//! registry; this is the minimal arithmetic the eigensolver needs).
+
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Complex f64.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+    pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> C64 {
+        C64 { re, im }
+    }
+
+    #[inline]
+    pub fn real(re: f64) -> C64 {
+        C64 { re, im: 0.0 }
+    }
+
+    #[inline]
+    pub fn conj(self) -> C64 {
+        C64 { re: self.re, im: -self.im }
+    }
+
+    /// |z|² — cheap magnitude for comparisons.
+    #[inline]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    /// Principal square root.
+    pub fn sqrt(self) -> C64 {
+        let r = self.abs();
+        if r == 0.0 {
+            return C64::ZERO;
+        }
+        let re = ((r + self.re) * 0.5).sqrt();
+        let im_mag = ((r - self.re) * 0.5).sqrt();
+        C64::new(re, if self.im >= 0.0 { im_mag } else { -im_mag })
+    }
+
+    #[inline]
+    pub fn scale(self, a: f64) -> C64 {
+        C64::new(self.re * a, self.im * a)
+    }
+}
+
+impl Add for C64 {
+    type Output = C64;
+    #[inline]
+    fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl Sub for C64 {
+    type Output = C64;
+    #[inline]
+    fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for C64 {
+    type Output = C64;
+    #[inline]
+    fn mul(self, o: C64) -> C64 {
+        C64::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+}
+
+impl Div for C64 {
+    type Output = C64;
+    #[inline]
+    fn div(self, o: C64) -> C64 {
+        // Smith's algorithm for robustness against overflow.
+        if o.re.abs() >= o.im.abs() {
+            if o.re == 0.0 && o.im == 0.0 {
+                return C64::new(f64::NAN, f64::NAN);
+            }
+            let r = o.im / o.re;
+            let d = o.re + o.im * r;
+            C64::new((self.re + self.im * r) / d, (self.im - self.re * r) / d)
+        } else {
+            let r = o.re / o.im;
+            let d = o.re * r + o.im;
+            C64::new((self.re * r + self.im) / d, (self.im * r - self.re) / d)
+        }
+    }
+}
+
+impl Neg for C64 {
+    type Output = C64;
+    #[inline]
+    fn neg(self) -> C64 {
+        C64::new(-self.re, -self.im)
+    }
+}
+
+impl AddAssign for C64 {
+    #[inline]
+    fn add_assign(&mut self, o: C64) {
+        *self = *self + o;
+    }
+}
+
+impl SubAssign for C64 {
+    #[inline]
+    fn sub_assign(&mut self, o: C64) {
+        *self = *self - o;
+    }
+}
+
+impl MulAssign for C64 {
+    #[inline]
+    fn mul_assign(&mut self, o: C64) {
+        *self = *self * o;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_ops() {
+        let a = C64::new(1.0, 2.0);
+        let b = C64::new(3.0, -1.0);
+        assert_eq!(a + b, C64::new(4.0, 1.0));
+        assert_eq!(a * b, C64::new(5.0, 5.0));
+        let q = a / b;
+        let back = q * b;
+        assert!((back - a).abs() < 1e-14);
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        for z in [C64::new(2.0, 3.0), C64::new(-4.0, 0.0), C64::new(0.0, -5.0), C64::new(-1.0, -1.0)] {
+            let s = z.sqrt();
+            assert!((s * s - z).abs() < 1e-12, "{z:?}");
+        }
+    }
+
+    #[test]
+    fn div_by_zero_is_nan() {
+        let q = C64::ONE / C64::ZERO;
+        assert!(q.re.is_nan());
+    }
+}

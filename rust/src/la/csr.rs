@@ -1,0 +1,292 @@
+//! Compressed-sparse-row matrices — the discretised PDE operators.
+//!
+//! All solver/preconditioner hot loops run over this layout; `matvec_into`
+//! is the single most executed kernel in the repository.
+
+use anyhow::{bail, Result};
+
+/// CSR sparse matrix with `f64` entries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    nrows: usize,
+    ncols: usize,
+    /// Row start offsets, length `nrows + 1`.
+    pub row_ptr: Vec<usize>,
+    /// Column indices, sorted within each row.
+    pub col_idx: Vec<usize>,
+    /// Nonzero values, aligned with `col_idx`.
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from (row, col, value) triplets; duplicates are summed, entries
+    /// that sum to exactly zero are kept (structural nonzeros matter for ILU).
+    pub fn from_triplets(nrows: usize, ncols: usize, triplets: &[(usize, usize, f64)]) -> Csr {
+        let mut entries: Vec<(usize, usize, f64)> = triplets.to_vec();
+        entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        // merge duplicates
+        let mut merged: Vec<(usize, usize, f64)> = Vec::with_capacity(entries.len());
+        for (r, c, v) in entries {
+            assert!(r < nrows && c < ncols, "triplet ({r},{c}) out of bounds");
+            match merged.last_mut() {
+                Some(last) if last.0 == r && last.1 == c => last.2 += v,
+                _ => merged.push((r, c, v)),
+            }
+        }
+        let mut row_ptr = vec![0usize; nrows + 1];
+        for &(r, _, _) in &merged {
+            row_ptr[r + 1] += 1;
+        }
+        for i in 0..nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let col_idx = merged.iter().map(|&(_, c, _)| c).collect();
+        let vals = merged.iter().map(|&(_, _, v)| v).collect();
+        Csr { nrows, ncols, row_ptr, col_idx, vals }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Csr {
+        Csr::from_triplets(n, n, &(0..n).map(|i| (i, i, 1.0)).collect::<Vec<_>>())
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// All stored values in row-major CSR order.
+    pub fn values(&self) -> &[f64] {
+        &self.vals
+    }
+
+    /// Column indices aligned with [`Csr::values`].
+    pub fn col_indices(&self) -> &[usize] {
+        &self.col_idx
+    }
+
+    /// Row `i` as (cols, vals) slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[a..b], &self.vals[a..b])
+    }
+
+    /// Entry lookup (binary search within the row).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&j) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// y = A x (allocating).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = A x into a caller-provided buffer. Hot path.
+    #[inline]
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
+        for i in 0..self.nrows {
+            let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            let mut s = 0.0;
+            // Indexed loop over the row; bounds checks hoist since a..b are
+            // monotone and col_idx entries were validated at construction.
+            for k in a..b {
+                s += self.vals[k] * x[self.col_idx[k]];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// y = Aᵀ x.
+    pub fn matvec_transpose(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.ncols];
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            let xi = x[i];
+            for (&c, &v) in cols.iter().zip(vals) {
+                y[c] += v * xi;
+            }
+        }
+        y
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Csr {
+        let mut trips = Vec::with_capacity(self.nnz());
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                trips.push((c, i, v));
+            }
+        }
+        Csr::from_triplets(self.ncols, self.nrows, &trips)
+    }
+
+    /// Main diagonal (zeros where absent).
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.nrows.min(self.ncols)).map(|i| self.get(i, i)).collect()
+    }
+
+    /// Symmetric part ½(A + Aᵀ) (used by the ICC fallback on nonsymmetric A).
+    pub fn symmetric_part(&self) -> Csr {
+        let mut trips = Vec::with_capacity(2 * self.nnz());
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                trips.push((i, c, 0.5 * v));
+                trips.push((c, i, 0.5 * v));
+            }
+        }
+        Csr::from_triplets(self.nrows, self.ncols, &trips)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.vals.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max relative asymmetry |a_ij - a_ji| / ||A||_F — cheap symmetry probe.
+    pub fn asymmetry(&self) -> f64 {
+        let mut worst: f64 = 0.0;
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                worst = worst.max((v - self.get(c, i)).abs());
+            }
+        }
+        let f = self.fro_norm();
+        if f == 0.0 {
+            0.0
+        } else {
+            worst / f
+        }
+    }
+
+    /// Scale all values.
+    pub fn scale(&mut self, alpha: f64) {
+        for v in &mut self.vals {
+            *v *= alpha;
+        }
+    }
+
+    /// A + alpha * I (square matrices). Keeps CSR invariants.
+    pub fn add_diag(&self, alpha: f64) -> Csr {
+        assert_eq!(self.nrows, self.ncols);
+        let mut trips: Vec<(usize, usize, f64)> = Vec::with_capacity(self.nnz() + self.nrows);
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                trips.push((i, c, v));
+            }
+            trips.push((i, i, alpha));
+        }
+        Csr::from_triplets(self.nrows, self.ncols, &trips)
+    }
+
+    /// Validate structural invariants (used by property tests).
+    pub fn validate(&self) -> Result<()> {
+        if self.row_ptr.len() != self.nrows + 1 {
+            bail!("row_ptr length");
+        }
+        if *self.row_ptr.last().unwrap() != self.vals.len() || self.col_idx.len() != self.vals.len() {
+            bail!("ptr/idx/vals mismatch");
+        }
+        for i in 0..self.nrows {
+            if self.row_ptr[i] > self.row_ptr[i + 1] {
+                bail!("row_ptr not monotone at {i}");
+            }
+            let (cols, _) = self.row(i);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    bail!("row {i} columns not strictly increasing");
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c >= self.ncols {
+                    bail!("column out of range in row {i}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [ 4 -1  0 ]
+        // [-1  4 -1 ]
+        // [ 0 -1  4 ]
+        Csr::from_triplets(
+            3,
+            3,
+            &[(0, 0, 4.0), (0, 1, -1.0), (1, 0, -1.0), (1, 1, 4.0), (1, 2, -1.0), (2, 1, -1.0), (2, 2, 4.0)],
+        )
+    }
+
+    #[test]
+    fn triplets_merge_and_sort() {
+        let a = Csr::from_triplets(2, 2, &[(1, 1, 2.0), (0, 0, 1.0), (1, 1, 3.0)]);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.get(1, 1), 5.0);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = sample();
+        let y = a.matvec(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![2.0, 4.0, 10.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = sample();
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn matvec_transpose_consistent() {
+        let a = Csr::from_triplets(2, 3, &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0)]);
+        let x = [1.0, -1.0];
+        let y1 = a.matvec_transpose(&x);
+        let y2 = a.transpose().matvec(&x);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn symmetric_part_is_symmetric() {
+        let a = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (0, 1, 2.0), (1, 1, 3.0)]);
+        let s = a.symmetric_part();
+        assert_eq!(s.get(0, 1), 1.0);
+        assert_eq!(s.get(1, 0), 1.0);
+        assert!(s.asymmetry() < 1e-15);
+    }
+
+    #[test]
+    fn diag_and_add_diag() {
+        let a = sample();
+        assert_eq!(a.diag(), vec![4.0, 4.0, 4.0]);
+        let b = a.add_diag(1.0);
+        assert_eq!(b.diag(), vec![5.0, 5.0, 5.0]);
+        b.validate().unwrap();
+    }
+}

@@ -1,0 +1,371 @@
+//! Dense real matrices (column-major) with the factorizations the Krylov
+//! machinery needs: Householder QR (thin), triangular solves, small-system
+//! LU solve, and general least squares.
+
+use anyhow::{bail, Result};
+
+/// Column-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Column-major storage: element (i, j) at `data[j * nrows + i]`.
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(nrows: usize, ncols: usize) -> Mat {
+        Mat { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From row-major nested slices (test convenience).
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let nrows = rows.len();
+        let ncols = if nrows > 0 { rows[0].len() } else { 0 };
+        let mut m = Mat::zeros(nrows, ncols);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), ncols);
+            for (j, &v) in r.iter().enumerate() {
+                m[(i, j)] = v;
+            }
+        }
+        m
+    }
+
+    /// Column `j` as a slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    /// Column `j` as a mutable slice.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        let n = self.nrows;
+        &mut self.data[j * n..(j + 1) * n]
+    }
+
+    /// Set column `j` from a slice.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.nrows);
+        self.col_mut(j).copy_from_slice(v);
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.ncols, self.nrows);
+        for j in 0..self.ncols {
+            for i in 0..self.nrows {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// C = A * B.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.ncols, b.nrows);
+        let mut c = Mat::zeros(self.nrows, b.ncols);
+        for j in 0..b.ncols {
+            for k in 0..self.ncols {
+                let bkj = b[(k, j)];
+                if bkj == 0.0 {
+                    continue;
+                }
+                let a_col = self.col(k);
+                let c_col = c.col_mut(j);
+                for i in 0..a_col.len() {
+                    c_col[i] += a_col[i] * bkj;
+                }
+            }
+        }
+        c
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for j in 0..self.ncols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            let col = self.col(j);
+            for i in 0..self.nrows {
+                y[i] += col[i] * xj;
+            }
+        }
+        y
+    }
+
+    /// y = Aᵀ x.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.nrows);
+        (0..self.ncols).map(|j| crate::la::dot(self.col(j), x)).collect()
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Thin Householder QR: self (m×n, m ≥ n) = Q (m×n, orthonormal cols) R (n×n upper).
+    pub fn qr_thin(&self) -> (Mat, Mat) {
+        let (m, n) = (self.nrows, self.ncols);
+        assert!(m >= n, "qr_thin requires m >= n");
+        let mut a = self.clone();
+        // Householder vectors stored in-place below the diagonal; betas aside.
+        let mut betas = vec![0.0; n];
+        for k in 0..n {
+            // Build v for column k.
+            let mut normx = 0.0;
+            for i in k..m {
+                normx += a[(i, k)] * a[(i, k)];
+            }
+            normx = normx.sqrt();
+            if normx == 0.0 {
+                betas[k] = 0.0;
+                continue;
+            }
+            let alpha = if a[(k, k)] >= 0.0 { -normx } else { normx };
+            let v0 = a[(k, k)] - alpha;
+            a[(k, k)] = alpha;
+            let mut vtv = v0 * v0;
+            for i in k + 1..m {
+                vtv += a[(i, k)] * a[(i, k)];
+            }
+            betas[k] = if vtv == 0.0 { 0.0 } else { 2.0 / vtv };
+            // Apply H to trailing columns. v = [v0, a[k+1.., k]].
+            for j in k + 1..n {
+                let mut s = v0 * a[(k, j)];
+                for i in k + 1..m {
+                    s += a[(i, k)] * a[(i, j)];
+                }
+                s *= betas[k];
+                a[(k, j)] -= s * v0;
+                for i in k + 1..m {
+                    let aik = a[(i, k)];
+                    a[(i, j)] -= s * aik;
+                }
+            }
+            // Store normalized v tail in-place (below diag of column k), with
+            // implicit v0 stored separately — reuse betas structure by storing
+            // v0 in a shadow: we scale the tail by 1/v0 so v0 == 1 implicitly.
+            if v0 != 0.0 {
+                for i in k + 1..m {
+                    a[(i, k)] /= v0;
+                }
+                betas[k] *= v0 * v0;
+            }
+        }
+        // Extract R.
+        let mut r = Mat::zeros(n, n);
+        for j in 0..n {
+            for i in 0..=j {
+                r[(i, j)] = a[(i, j)];
+            }
+        }
+        // Form thin Q by applying H_0 .. H_{n-1} to the first n columns of I.
+        let mut q = Mat::zeros(m, n);
+        for j in 0..n {
+            q[(j, j)] = 1.0;
+        }
+        for k in (0..n).rev() {
+            let beta = betas[k];
+            if beta == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                // v = [1, a[k+1.., k]]
+                let mut s = q[(k, j)];
+                for i in k + 1..m {
+                    s += a[(i, k)] * q[(i, j)];
+                }
+                s *= beta;
+                q[(k, j)] -= s;
+                for i in k + 1..m {
+                    let aik = a[(i, k)];
+                    q[(i, j)] -= s * aik;
+                }
+            }
+        }
+        (q, r)
+    }
+
+    /// Solve R x = b with R upper triangular.
+    pub fn solve_upper(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let n = self.ncols;
+        assert_eq!(self.nrows, n);
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        for i in (0..n).rev() {
+            for j in i + 1..n {
+                x[i] -= self[(i, j)] * x[j];
+            }
+            let d = self[(i, i)];
+            if d.abs() < 1e-300 {
+                bail!("singular upper-triangular system at row {i}");
+            }
+            x[i] /= d;
+        }
+        Ok(x)
+    }
+
+    /// Least-squares solve min ||A x - b|| via thin QR (m ≥ n).
+    pub fn lstsq(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let (q, r) = self.qr_thin();
+        let qtb = q.matvec_t(b);
+        r.solve_upper(&qtb)
+    }
+
+    /// Solve A x = b with partial-pivot LU (small square systems).
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let n = self.nrows;
+        assert_eq!(self.ncols, n);
+        assert_eq!(b.len(), n);
+        let mut a = self.clone();
+        let mut x = b.to_vec();
+        let mut piv: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // pivot
+            let mut p = k;
+            for i in k + 1..n {
+                if a[(i, k)].abs() > a[(p, k)].abs() {
+                    p = i;
+                }
+            }
+            if a[(p, k)].abs() < 1e-300 {
+                bail!("singular matrix in LU at column {k}");
+            }
+            if p != k {
+                for j in 0..n {
+                    let (u, v) = (a[(k, j)], a[(p, j)]);
+                    a[(k, j)] = v;
+                    a[(p, j)] = u;
+                }
+                x.swap(k, p);
+                piv.swap(k, p);
+            }
+            for i in k + 1..n {
+                let l = a[(i, k)] / a[(k, k)];
+                a[(i, k)] = l;
+                for j in k + 1..n {
+                    let akj = a[(k, j)];
+                    a[(i, j)] -= l * akj;
+                }
+                x[i] -= l * x[k];
+            }
+        }
+        // back substitution
+        for i in (0..n).rev() {
+            for j in i + 1..n {
+                x[i] -= a[(i, j)] * x[j];
+            }
+            x[i] /= a[(i, i)];
+        }
+        Ok(x)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[j * self.nrows + i]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[j * self.nrows + i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random(m: usize, n: usize, rng: &mut Rng) -> Mat {
+        let mut a = Mat::zeros(m, n);
+        for v in &mut a.data {
+            *v = rng.normal();
+        }
+        a
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut r = Rng::new(1);
+        let a = random(4, 3, &mut r);
+        let i3 = Mat::eye(3);
+        assert!((a.matmul(&i3).data.iter().zip(&a.data).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)) < 1e-15);
+    }
+
+    #[test]
+    fn qr_reconstructs_and_orthonormal() {
+        let mut rng = Rng::new(2);
+        for &(m, n) in &[(5, 3), (8, 8), (10, 2)] {
+            let a = random(m, n, &mut rng);
+            let (q, r) = a.qr_thin();
+            let qr = q.matmul(&r);
+            for k in 0..a.data.len() {
+                assert!((qr.data[k] - a.data[k]).abs() < 1e-10, "m={m} n={n}");
+            }
+            let qtq = q.transpose().matmul(&q);
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((qtq[(i, j)] - want).abs() < 1e-10);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lstsq_exact_for_square() {
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = a.lstsq(&[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lstsq_overdetermined_residual_orthogonal() {
+        let mut rng = Rng::new(3);
+        let a = random(10, 4, &mut rng);
+        let b: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let x = a.lstsq(&b).unwrap();
+        let ax = a.matvec(&x);
+        let res: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+        // Aᵀ r == 0 at the LS optimum.
+        let atr = a.matvec_t(&res);
+        assert!(atr.iter().all(|v| v.abs() < 1e-9), "{atr:?}");
+    }
+
+    #[test]
+    fn lu_solve_roundtrip() {
+        let mut rng = Rng::new(4);
+        let a = random(6, 6, &mut rng);
+        let xtrue: Vec<f64> = (0..6).map(|i| i as f64 - 2.5).collect();
+        let b = a.matvec(&xtrue);
+        let x = a.solve(&b).unwrap();
+        for (u, v) in x.iter().zip(&xtrue) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn solve_upper_detects_singular() {
+        let r = Mat::from_rows(&[&[1.0, 2.0], &[0.0, 0.0]]);
+        assert!(r.solve_upper(&[1.0, 1.0]).is_err());
+    }
+}

@@ -1,0 +1,389 @@
+//! Dense nonsymmetric eigensolver: complex Hessenberg reduction followed by
+//! explicitly-shifted (Wilkinson) QR iteration to Schur form, then eigenvector
+//! back-substitution.
+//!
+//! GCRO-DR needs the `k` smallest-magnitude harmonic Ritz pairs of small
+//! (m ≈ 30–80) nonsymmetric matrices each cycle; LAPACK is unavailable
+//! offline, so this module implements the classic algorithm directly. The
+//! explicit-shift variant is chosen over implicit bulge-chasing for
+//! robustness and auditability at these sizes.
+
+use super::c64::C64;
+use super::zmat::ZMat;
+use anyhow::{bail, Result};
+
+/// Result of an eigendecomposition: `values[j]` pairs with column `j` of `vectors`.
+#[derive(Debug, Clone)]
+pub struct Eig {
+    pub values: Vec<C64>,
+    pub vectors: ZMat,
+}
+
+/// Complex Givens rotation zeroing `b` in `[a; b]`: returns (c, s, r) with
+/// `[c, s; -conj(s), c] [a; b] = [r; 0]` and `c` real.
+fn givens(a: C64, b: C64) -> (f64, C64, C64) {
+    if b.norm_sqr() == 0.0 {
+        return (1.0, C64::ZERO, a);
+    }
+    if a.norm_sqr() == 0.0 {
+        let babs = b.abs();
+        return (0.0, b.conj().scale(1.0 / babs), C64::real(babs));
+    }
+    let aabs = a.abs();
+    let t = (a.norm_sqr() + b.norm_sqr()).sqrt();
+    let c = aabs / t;
+    let phase = a.scale(1.0 / aabs);
+    let s = phase * b.conj().scale(1.0 / t);
+    let r = phase.scale(t);
+    (c, s, r)
+}
+
+/// Reduce `a` to upper Hessenberg form H = Qᴴ A Q via Householder; returns (H, Q).
+fn hessenberg(a: &ZMat) -> (ZMat, ZMat) {
+    let n = a.nrows;
+    let mut h = a.clone();
+    let mut q = ZMat::eye(n);
+    for k in 0..n.saturating_sub(2) {
+        // Householder vector from column k, rows k+1..n.
+        let mut sigma = 0.0;
+        for i in k + 1..n {
+            sigma += h[(i, k)].norm_sqr();
+        }
+        if sigma == 0.0 {
+            continue;
+        }
+        let x0 = h[(k + 1, k)];
+        let alpha_mag = sigma.sqrt();
+        let phase = if x0.norm_sqr() == 0.0 { C64::ONE } else { x0.scale(1.0 / x0.abs()) };
+        let alpha = -phase.scale(alpha_mag);
+        let mut v: Vec<C64> = (k + 1..n).map(|i| h[(i, k)]).collect();
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|z| z.norm_sqr()).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        let beta = 2.0 / vnorm2;
+        // H ← (I - β v vᴴ) H
+        for j in k..n {
+            let mut s = C64::ZERO;
+            for (t, i) in (k + 1..n).enumerate() {
+                s += v[t].conj() * h[(i, j)];
+            }
+            s = s.scale(beta);
+            for (t, i) in (k + 1..n).enumerate() {
+                let d = v[t] * s;
+                h[(i, j)] -= d;
+            }
+        }
+        // H ← H (I - β v vᴴ)
+        for i in 0..n {
+            let mut s = C64::ZERO;
+            for (t, j) in (k + 1..n).enumerate() {
+                s += h[(i, j)] * v[t];
+            }
+            s = s.scale(beta);
+            for (t, j) in (k + 1..n).enumerate() {
+                let d = s * v[t].conj();
+                h[(i, j)] -= d;
+            }
+        }
+        // Q ← Q (I - β v vᴴ)
+        for i in 0..n {
+            let mut s = C64::ZERO;
+            for (t, j) in (k + 1..n).enumerate() {
+                s += q[(i, j)] * v[t];
+            }
+            s = s.scale(beta);
+            for (t, j) in (k + 1..n).enumerate() {
+                let d = s * v[t].conj();
+                q[(i, j)] -= d;
+            }
+        }
+        // Explicitly zero the annihilated entries.
+        h[(k + 1, k)] = alpha;
+        for i in k + 2..n {
+            h[(i, k)] = C64::ZERO;
+        }
+    }
+    (h, q)
+}
+
+/// Wilkinson shift from the trailing 2×2 of the active block.
+fn wilkinson_shift(h: &ZMat, hi: usize) -> C64 {
+    let a = h[(hi - 1, hi - 1)];
+    let b = h[(hi - 1, hi)];
+    let c = h[(hi, hi - 1)];
+    let d = h[(hi, hi)];
+    let tr2 = (a + d).scale(0.5);
+    let det = a * d - b * c;
+    let disc = (tr2 * tr2 - det).sqrt();
+    let l1 = tr2 + disc;
+    let l2 = tr2 - disc;
+    if (l1 - d).norm_sqr() <= (l2 - d).norm_sqr() {
+        l1
+    } else {
+        l2
+    }
+}
+
+/// Schur decomposition A = Z T Zᴴ with T upper triangular.
+pub fn schur(a: &ZMat) -> Result<(ZMat, ZMat)> {
+    let n = a.nrows;
+    assert_eq!(a.ncols, n);
+    if n == 0 {
+        return Ok((ZMat::zeros(0, 0), ZMat::zeros(0, 0)));
+    }
+    let (mut h, mut z) = hessenberg(a);
+    let eps = f64::EPSILON;
+    let max_total = 60 * n.max(1);
+    let mut hi = n - 1;
+    let mut iters_at_block = 0usize;
+    let mut total = 0usize;
+    while hi > 0 {
+        // Deflate converged subdiagonals.
+        let mut lo = hi;
+        while lo > 0 {
+            let s = h[(lo - 1, lo - 1)].abs() + h[(lo, lo)].abs();
+            let s = if s == 0.0 { h.fro_norm() } else { s };
+            if h[(lo, lo - 1)].abs() <= eps * s {
+                h[(lo, lo - 1)] = C64::ZERO;
+                break;
+            }
+            lo -= 1;
+        }
+        if lo == hi {
+            hi -= 1;
+            iters_at_block = 0;
+            continue;
+        }
+        total += 1;
+        iters_at_block += 1;
+        if total > max_total {
+            bail!("QR iteration failed to converge after {total} sweeps (n={n})");
+        }
+        // Shift: Wilkinson normally, exceptional after stagnation.
+        let mu = if iters_at_block % 12 == 0 {
+            let x = h[(hi, hi - 1)].abs() + if hi >= 2 { h[(hi - 1, hi - 2)].abs() } else { 0.0 };
+            h[(hi, hi)] + C64::real(1.5 * x)
+        } else {
+            wilkinson_shift(&h, hi)
+        };
+        // Explicit shifted QR step on the active block [lo..=hi]:
+        //   H - μI = G R ;  H ← R Gᴴ... (we apply rotations two-sided).
+        for i in lo..=hi {
+            h[(i, i)] -= mu;
+        }
+        let mut rots: Vec<(f64, C64)> = Vec::with_capacity(hi - lo);
+        for i in lo..hi {
+            let (c, s, r) = givens(h[(i, i)], h[(i + 1, i)]);
+            h[(i, i)] = r;
+            h[(i + 1, i)] = C64::ZERO;
+            // rows i, i+1 for ALL trailing columns (off-block coupling keeps
+            // the full Schur form consistent, not just the active block).
+            for j in i + 1..n {
+                let (x, y) = (h[(i, j)], h[(i + 1, j)]);
+                h[(i, j)] = x.scale(c) + s * y;
+                h[(i + 1, j)] = y.scale(c) - s.conj() * x;
+            }
+            rots.push((c, s));
+        }
+        // RQᴴ: apply each rotation from the right to columns i, i+1.
+        for (t, &(c, s)) in rots.iter().enumerate() {
+            let i = lo + t;
+            let top = (i + 1).min(hi) + 1; // rows 0..top participate
+            for r_ in 0..top.min(n) {
+                let (x, y) = (h[(r_, i)], h[(r_, i + 1)]);
+                h[(r_, i)] = x.scale(c) + y * s.conj();
+                h[(r_, i + 1)] = y.scale(c) - x * s;
+            }
+            for r_ in 0..n {
+                let (x, y) = (z[(r_, i)], z[(r_, i + 1)]);
+                z[(r_, i)] = x.scale(c) + y * s.conj();
+                z[(r_, i + 1)] = y.scale(c) - x * s;
+            }
+        }
+        for i in lo..=hi {
+            h[(i, i)] += mu;
+        }
+    }
+    // Zero strictly-lower storage noise.
+    for j in 0..n {
+        for i in j + 1..n {
+            h[(i, j)] = C64::ZERO;
+        }
+    }
+    Ok((h, z))
+}
+
+/// Eigenvectors of an upper-triangular T by back-substitution; column k pairs
+/// with T[k,k].
+fn triangular_eigvecs(t: &ZMat) -> ZMat {
+    let n = t.nrows;
+    let mut v = ZMat::zeros(n, n);
+    let tnorm = t.fro_norm().max(1e-300);
+    for k in 0..n {
+        let lam = t[(k, k)];
+        v[(k, k)] = C64::ONE;
+        for j in (0..k).rev() {
+            // y[j] = -(Σ_{i=j+1..=k} T[j,i] y[i]) / (T[j,j] - λ)
+            let mut s = C64::ZERO;
+            for i in j + 1..=k {
+                s += t[(j, i)] * v[(i, k)];
+            }
+            let mut d = t[(j, j)] - lam;
+            if d.abs() < 1e-14 * tnorm {
+                // Perturb a (near-)defective denominator; standard LAPACK trick.
+                d = C64::real(1e-14 * tnorm);
+            }
+            v[(j, k)] = -s / d;
+        }
+        // Normalize.
+        let nrm = (0..=k).map(|i| v[(i, k)].norm_sqr()).sum::<f64>().sqrt();
+        if nrm > 0.0 {
+            for i in 0..=k {
+                v[(i, k)] = v[(i, k)].scale(1.0 / nrm);
+            }
+        }
+    }
+    v
+}
+
+/// Full eigendecomposition of a general complex matrix.
+pub fn eig(a: &ZMat) -> Result<Eig> {
+    let (t, z) = schur(a)?;
+    let n = a.nrows;
+    let values: Vec<C64> = (0..n).map(|i| t[(i, i)]).collect();
+    let vt = triangular_eigvecs(&t);
+    let vectors = z.matmul(&vt);
+    Ok(Eig { values, vectors })
+}
+
+/// Generalized eigenproblem A z = θ B z for small dense complex matrices,
+/// solved as B⁻¹A z = θ z (B must be nonsingular — true for the harmonic-Ritz
+/// systems as long as the Arnoldi basis is full rank).
+pub fn eig_generalized(a: &ZMat, b: &ZMat) -> Result<Eig> {
+    let n = a.nrows;
+    assert_eq!(b.nrows, n);
+    let binv_a = b.solve_columns(a)?;
+    eig(&binv_a)
+}
+
+/// Indices of the `k` smallest-|θ| eigenvalues.
+pub fn smallest_k_indices(values: &[C64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&i, &j| values[i].norm_sqr().partial_cmp(&values[j].norm_sqr()).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::dense::Mat;
+    use crate::util::prng::Rng;
+
+    fn residual(a: &ZMat, e: &Eig) -> f64 {
+        let n = a.nrows;
+        let mut worst: f64 = 0.0;
+        for k in 0..n {
+            let mut r = vec![C64::ZERO; n];
+            for i in 0..n {
+                for j in 0..n {
+                    r[i] += a[(i, j)] * e.vectors[(j, k)];
+                }
+                r[i] -= e.values[k] * e.vectors[(i, k)];
+            }
+            let nrm = r.iter().map(|z| z.norm_sqr()).sum::<f64>().sqrt();
+            worst = worst.max(nrm);
+        }
+        worst
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut a = ZMat::zeros(3, 3);
+        a[(0, 0)] = C64::real(3.0);
+        a[(1, 1)] = C64::real(-1.0);
+        a[(2, 2)] = C64::real(0.5);
+        let e = eig(&a).unwrap();
+        let mut vals: Vec<f64> = e.values.iter().map(|z| z.re).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((vals[0] + 1.0).abs() < 1e-12);
+        assert!((vals[1] - 0.5).abs() < 1e-12);
+        assert!((vals[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rotation_has_complex_pair() {
+        // [[cos, -sin], [sin, cos]] has eigenvalues e^{±iθ}.
+        let th = 0.7f64;
+        let a = ZMat::from_real(&Mat::from_rows(&[&[th.cos(), -th.sin()], &[th.sin(), th.cos()]]));
+        let e = eig(&a).unwrap();
+        let mut ims: Vec<f64> = e.values.iter().map(|z| z.im).collect();
+        ims.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((ims[0] + th.sin()).abs() < 1e-10);
+        assert!((ims[1] - th.sin()).abs() < 1e-10);
+        assert!(residual(&a, &e) < 1e-10);
+    }
+
+    #[test]
+    fn random_matrices_small_residual_and_trace() {
+        let mut rng = Rng::new(11);
+        for n in [4usize, 9, 16, 33] {
+            let mut m = Mat::zeros(n, n);
+            for v in &mut m.data {
+                *v = rng.normal();
+            }
+            let a = ZMat::from_real(&m);
+            let e = eig(&a).unwrap();
+            // Eigenvalue sum == trace.
+            let tr: f64 = (0..n).map(|i| m[(i, i)]).sum();
+            let s: C64 = e.values.iter().fold(C64::ZERO, |acc, &z| acc + z);
+            assert!((s.re - tr).abs() < 1e-8 * (1.0 + tr.abs()), "n={n} trace");
+            assert!(s.im.abs() < 1e-8, "n={n} imag trace {}", s.im);
+            assert!(residual(&a, &e) < 1e-7, "n={n} residual {}", residual(&a, &e));
+        }
+    }
+
+    #[test]
+    fn hessenberg_preserves_similarity() {
+        let mut rng = Rng::new(5);
+        let n = 8;
+        let mut m = Mat::zeros(n, n);
+        for v in &mut m.data {
+            *v = rng.normal();
+        }
+        let a = ZMat::from_real(&m);
+        let (h, q) = hessenberg(&a);
+        // Q H Qᴴ == A
+        let back = q.matmul(&h).matmul(&q.adjoint());
+        let mut diff: f64 = 0.0;
+        for k in 0..back.data.len() {
+            diff = diff.max((back.data[k] - a.data[k]).abs());
+        }
+        assert!(diff < 1e-10, "{diff}");
+        // H is Hessenberg
+        for j in 0..n {
+            for i in j + 2..n {
+                assert!(h[(i, j)].abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn generalized_reduces_to_standard_with_identity_b() {
+        let a = ZMat::from_real(&Mat::from_rows(&[&[2.0, 1.0], &[0.0, 3.0]]));
+        let e = eig_generalized(&a, &ZMat::eye(2)).unwrap();
+        let mut vals: Vec<f64> = e.values.iter().map(|z| z.re).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((vals[0] - 2.0).abs() < 1e-10);
+        assert!((vals[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn smallest_k_selection() {
+        let vals = vec![C64::real(5.0), C64::new(0.0, 0.1), C64::real(-2.0), C64::new(1.0, 1.0)];
+        let idx = smallest_k_indices(&vals, 2);
+        assert_eq!(idx, vec![1, 3]);
+    }
+}

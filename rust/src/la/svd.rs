@@ -1,0 +1,151 @@
+//! One-sided Jacobi SVD for small dense matrices.
+//!
+//! Used by the δ-subspace instrument: for orthonormal bases C and Q the
+//! one-sided distance δ(Q, C) = ‖(I − Π_C) Π_Q‖₂ equals sin of the largest
+//! principal angle, computable from the singular values of CᵀQ.
+
+use super::dense::Mat;
+
+/// Singular values of `a` (descending), via one-sided Jacobi on the columns.
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    let (u_s, _v) = jacobi_svd(a);
+    let mut s: Vec<f64> = (0..u_s.ncols).map(|j| crate::la::norm2(u_s.col(j))).collect();
+    s.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    s
+}
+
+/// One-sided Jacobi: returns (U·Σ, V) with a = (U·Σ) Vᵀ; columns of the first
+/// factor are mutually orthogonal with norms = singular values.
+pub fn jacobi_svd(a: &Mat) -> (Mat, Mat) {
+    let mut u = a.clone();
+    let n = u.ncols;
+    let mut v = Mat::eye(n);
+    let tol = 1e-14;
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                let (cp, cq): (Vec<f64>, Vec<f64>) = (u.col(p).to_vec(), u.col(q).to_vec());
+                let app = crate::la::dot(&cp, &cp);
+                let aqq = crate::la::dot(&cq, &cq);
+                let apq = crate::la::dot(&cp, &cq);
+                if apq.abs() <= tol * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                // Jacobi rotation that orthogonalizes columns p and q.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..u.nrows {
+                    let (x, y) = (u[(i, p)], u[(i, q)]);
+                    u[(i, p)] = c * x - s * y;
+                    u[(i, q)] = s * x + c * y;
+                }
+                for i in 0..n {
+                    let (x, y) = (v[(i, p)], v[(i, q)]);
+                    v[(i, p)] = c * x - s * y;
+                    v[(i, q)] = s * x + c * y;
+                }
+            }
+        }
+        if off < tol {
+            break;
+        }
+    }
+    (u, v)
+}
+
+/// Largest principal-angle sine between the column spaces of two matrices
+/// with **orthonormal** columns: δ = √(1 − σ_min(CᵀQ)²), clamped to [0, 1].
+pub fn subspace_sin_max(c: &Mat, q: &Mat) -> f64 {
+    assert_eq!(c.nrows, q.nrows);
+    let m = c.transpose().matmul(q);
+    let s = singular_values(&m);
+    let smin = s.last().copied().unwrap_or(0.0).clamp(0.0, 1.0);
+    (1.0 - smin * smin).max(0.0).sqrt()
+}
+
+/// Mean principal-angle sine between two orthonormal column spaces. The
+/// spectral δ saturates at 1 as soon as a *single* direction is badly
+/// matched (typical for k ≳ 5 subspaces of a large ambient space), so the
+/// mean over all k angles is the discriminative variant reported by the
+/// sort ablation.
+pub fn subspace_sin_mean(c: &Mat, q: &Mat) -> f64 {
+    assert_eq!(c.nrows, q.nrows);
+    let m = c.transpose().matmul(q);
+    let s = singular_values(&m);
+    if s.is_empty() {
+        return 1.0;
+    }
+    s.iter()
+        .map(|&sv| {
+            let sv = sv.clamp(0.0, 1.0);
+            (1.0 - sv * sv).max(0.0).sqrt()
+        })
+        .sum::<f64>()
+        / s.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn singular_values_of_diagonal() {
+        let a = Mat::from_rows(&[&[3.0, 0.0], &[0.0, -4.0], &[0.0, 0.0]]);
+        let s = singular_values(&a);
+        assert!((s[0] - 4.0).abs() < 1e-12);
+        assert!((s[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn svd_frobenius_invariant() {
+        let mut rng = Rng::new(8);
+        let mut a = Mat::zeros(7, 5);
+        for v in &mut a.data {
+            *v = rng.normal();
+        }
+        let s = singular_values(&a);
+        let f2: f64 = s.iter().map(|x| x * x).sum();
+        assert!((f2 - a.fro_norm().powi(2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identical_subspaces_have_zero_distance() {
+        let mut rng = Rng::new(9);
+        let mut a = Mat::zeros(10, 3);
+        for v in &mut a.data {
+            *v = rng.normal();
+        }
+        let (q, _) = a.qr_thin();
+        let d = subspace_sin_max(&q, &q);
+        assert!(d < 1e-7, "{d}");
+    }
+
+    #[test]
+    fn orthogonal_subspaces_have_distance_one() {
+        // e1,e2 vs e3,e4 in R^4.
+        let mut c = Mat::zeros(4, 2);
+        c[(0, 0)] = 1.0;
+        c[(1, 1)] = 1.0;
+        let mut q = Mat::zeros(4, 2);
+        q[(2, 0)] = 1.0;
+        q[(3, 1)] = 1.0;
+        assert!((subspace_sin_max(&c, &q) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rotated_subspace_angle() {
+        // span{e1} vs span{cosθ e1 + sinθ e2} → δ = sinθ.
+        let th = 0.3f64;
+        let mut c = Mat::zeros(3, 1);
+        c[(0, 0)] = 1.0;
+        let mut q = Mat::zeros(3, 1);
+        q[(0, 0)] = th.cos();
+        q[(1, 0)] = th.sin();
+        assert!((subspace_sin_max(&c, &q) - th.sin()).abs() < 1e-12);
+    }
+}

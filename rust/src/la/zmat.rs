@@ -1,0 +1,245 @@
+//! Small complex dense matrices (column-major) for the harmonic-Ritz
+//! eigenproblems inside GCRO-DR. Sizes are O(m) ≈ 30–80, so clarity wins
+//! over blocking.
+
+use super::c64::C64;
+
+/// Column-major complex matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ZMat {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub data: Vec<C64>,
+}
+
+impl ZMat {
+    pub fn zeros(nrows: usize, ncols: usize) -> ZMat {
+        ZMat { nrows, ncols, data: vec![C64::ZERO; nrows * ncols] }
+    }
+
+    pub fn eye(n: usize) -> ZMat {
+        let mut m = ZMat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = C64::ONE;
+        }
+        m
+    }
+
+    /// Lift a real matrix.
+    pub fn from_real(a: &super::dense::Mat) -> ZMat {
+        let mut m = ZMat::zeros(a.nrows, a.ncols);
+        for j in 0..a.ncols {
+            for i in 0..a.nrows {
+                m[(i, j)] = C64::real(a[(i, j)]);
+            }
+        }
+        m
+    }
+
+    pub fn matmul(&self, b: &ZMat) -> ZMat {
+        assert_eq!(self.ncols, b.nrows);
+        let mut c = ZMat::zeros(self.nrows, b.ncols);
+        for j in 0..b.ncols {
+            for k in 0..self.ncols {
+                let bkj = b[(k, j)];
+                if bkj == C64::ZERO {
+                    continue;
+                }
+                for i in 0..self.nrows {
+                    let v = self[(i, k)] * bkj;
+                    c[(i, j)] += v;
+                }
+            }
+        }
+        c
+    }
+
+    /// Conjugate transpose.
+    pub fn adjoint(&self) -> ZMat {
+        let mut t = ZMat::zeros(self.ncols, self.nrows);
+        for j in 0..self.ncols {
+            for i in 0..self.nrows {
+                t[(j, i)] = self[(i, j)].conj();
+            }
+        }
+        t
+    }
+
+    /// Solve A X = B column-wise with a single LU factorization (O(n³ + n²·k)
+    /// rather than O(n³·k) for k right-hand sides).
+    pub fn solve_columns(&self, rhs: &ZMat) -> anyhow::Result<ZMat> {
+        let n = self.nrows;
+        assert_eq!(self.ncols, n);
+        assert_eq!(rhs.nrows, n);
+        let mut a = self.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        // Factor PA = LU in place.
+        for k in 0..n {
+            let mut p = k;
+            for i in k + 1..n {
+                if a[(i, k)].norm_sqr() > a[(p, k)].norm_sqr() {
+                    p = i;
+                }
+            }
+            if a[(p, k)].norm_sqr() < 1e-300 {
+                anyhow::bail!("singular complex system at column {k}");
+            }
+            if p != k {
+                for j in 0..n {
+                    let (u, v) = (a[(k, j)], a[(p, j)]);
+                    a[(k, j)] = v;
+                    a[(p, j)] = u;
+                }
+                perm.swap(k, p);
+            }
+            for i in k + 1..n {
+                let l = a[(i, k)] / a[(k, k)];
+                a[(i, k)] = l;
+                for j in k + 1..n {
+                    let akj = a[(k, j)];
+                    a[(i, j)] -= l * akj;
+                }
+            }
+        }
+        let mut out = ZMat::zeros(n, rhs.ncols);
+        for c in 0..rhs.ncols {
+            // Permuted rhs.
+            let mut x: Vec<C64> = (0..n).map(|i| rhs[(perm[i], c)]).collect();
+            for i in 0..n {
+                for j in 0..i {
+                    let lij = a[(i, j)];
+                    let xj = x[j];
+                    x[i] -= lij * xj;
+                }
+            }
+            for i in (0..n).rev() {
+                for j in i + 1..n {
+                    let uij = a[(i, j)];
+                    let xj = x[j];
+                    x[i] -= uij * xj;
+                }
+                x[i] = x[i] / a[(i, i)];
+            }
+            for i in 0..n {
+                out[(i, c)] = x[i];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Solve A x = b by complex partial-pivot LU (small systems).
+    pub fn solve(&self, b: &[C64]) -> anyhow::Result<Vec<C64>> {
+        let n = self.nrows;
+        assert_eq!(self.ncols, n);
+        assert_eq!(b.len(), n);
+        let mut a = self.clone();
+        let mut x = b.to_vec();
+        for k in 0..n {
+            let mut p = k;
+            for i in k + 1..n {
+                if a[(i, k)].norm_sqr() > a[(p, k)].norm_sqr() {
+                    p = i;
+                }
+            }
+            if a[(p, k)].norm_sqr() < 1e-300 {
+                anyhow::bail!("singular complex system at column {k}");
+            }
+            if p != k {
+                for j in 0..n {
+                    let (u, v) = (a[(k, j)], a[(p, j)]);
+                    a[(k, j)] = v;
+                    a[(p, j)] = u;
+                }
+                x.swap(k, p);
+            }
+            for i in k + 1..n {
+                let l = a[(i, k)] / a[(k, k)];
+                a[(i, k)] = l;
+                for j in k + 1..n {
+                    let akj = a[(k, j)];
+                    a[(i, j)] -= l * akj;
+                }
+                let xk = x[k];
+                x[i] -= l * xk;
+            }
+        }
+        for i in (0..n).rev() {
+            for j in i + 1..n {
+                let xj = x[j];
+                x[i] -= a[(i, j)] * xj;
+            }
+            x[i] = x[i] / a[(i, i)];
+        }
+        Ok(x)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|z| z.norm_sqr()).sum::<f64>().sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for ZMat {
+    type Output = C64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &C64 {
+        &self.data[j * self.nrows + i]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for ZMat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut C64 {
+        &mut self.data[j * self.nrows + i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_and_adjoint() {
+        let mut a = ZMat::zeros(2, 2);
+        a[(0, 0)] = C64::new(1.0, 1.0);
+        a[(0, 1)] = C64::new(0.0, 2.0);
+        a[(1, 0)] = C64::new(3.0, 0.0);
+        a[(1, 1)] = C64::new(1.0, -1.0);
+        let aa = a.adjoint();
+        assert_eq!(aa[(0, 0)], C64::new(1.0, -1.0));
+        assert_eq!(aa[(1, 0)], C64::new(0.0, -2.0));
+        let prod = a.matmul(&ZMat::eye(2));
+        assert_eq!(prod, a);
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let mut a = ZMat::zeros(3, 3);
+        let vals = [
+            (0, 0, 2.0, 1.0),
+            (0, 1, 1.0, 0.0),
+            (0, 2, 0.0, -1.0),
+            (1, 0, 0.0, 1.0),
+            (1, 1, 3.0, 0.0),
+            (1, 2, 1.0, 1.0),
+            (2, 0, 1.0, 0.0),
+            (2, 1, 0.0, 0.0),
+            (2, 2, 4.0, -2.0),
+        ];
+        for (i, j, re, im) in vals {
+            a[(i, j)] = C64::new(re, im);
+        }
+        let xt = vec![C64::new(1.0, -1.0), C64::new(2.0, 0.5), C64::new(-0.5, 2.0)];
+        // b = A x
+        let mut b = vec![C64::ZERO; 3];
+        for i in 0..3 {
+            for j in 0..3 {
+                b[i] += a[(i, j)] * xt[j];
+            }
+        }
+        let x = a.solve(&b).unwrap();
+        for (u, v) in x.iter().zip(&xt) {
+            assert!((*u - *v).abs() < 1e-12);
+        }
+    }
+}

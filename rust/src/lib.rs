@@ -1,0 +1,38 @@
+//! # SKR — Sorting + Krylov Subspace Recycling for Neural-Operator Data Generation
+//!
+//! A production-quality reproduction of *"Accelerating Data Generation for Neural
+//! Operators via Krylov Subspace Recycling"* (ICLR 2024).
+//!
+//! The library is organised in three layers:
+//!
+//! * **L3 (this crate)** — the data-generation pipeline: PDE problem families are
+//!   sampled, discretised into sparse linear systems, **sorted** by parameter
+//!   similarity ([`coordinator::sorter`]), sharded over a worker pool
+//!   ([`coordinator::scheduler`]) and solved sequentially with **GCRO-DR Krylov
+//!   recycling** ([`solver::gcrodr`]) against a restarted **GMRES** baseline
+//!   ([`solver::gmres`]). Every substrate (CSR algebra, dense eigensolvers,
+//!   preconditioners, FDM/FVM/FEM discretisations, GRF samplers) is implemented
+//!   in-tree.
+//! * **L2 (build-time python)** — an FNO-2d forward/backward pass, AOT-lowered to
+//!   HLO text (`make artifacts`), loaded from Rust via [`runtime`].
+//! * **L1 (build-time python)** — the FNO spectral-convolution Pallas kernel.
+//!
+//! The public entry points a downstream user needs:
+//!
+//! * [`coordinator::pipeline::Pipeline`] — end-to-end dataset generation,
+//! * [`solver::solve_sequence`] — solve a sequence of systems with either engine,
+//! * [`pde`] — the four paper problem families (Darcy / Thermal / Poisson / Helmholtz),
+//! * [`no::trainer`] — train the FNO on a generated dataset through the PJRT runtime.
+
+pub mod coordinator;
+pub mod harness;
+pub mod la;
+pub mod no;
+pub mod pde;
+pub mod precond;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,108 @@
+//! `skr` — CLI for the SKR data-generation framework.
+//!
+//! Subcommands:
+//! * `generate`  — run the pipeline and export an `.npy` dataset
+//! * `compare`   — SKR vs GMRES on one configuration (quick speedup readout)
+//! * `table1`    — reproduce the paper's headline Table 1
+//! * `tables`    — reproduce the per-family sweep tables (3–30)
+//! * `ablation`  — reproduce Table 2 (sort vs no-sort + δ)
+//! * `figures`   — emit data series for Figs 1/4/5/7–13
+//! * `parallel`  — reproduce Tables 31/32 (threaded/block variants)
+//! * `train`     — train the FNO on a generated dataset via the PJRT runtime
+//! * `validate`  — reproduce Table 33 (dataset-validity experiment)
+
+use skr::coordinator::{Pipeline, PipelineConfig};
+use skr::harness;
+use skr::util::args::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
+    let result = match cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "compare" => harness::compare::run(&args),
+        "table1" => harness::table1::run(&args),
+        "tables" => harness::sweeps::run(&args),
+        "ablation" => harness::ablation::run(&args),
+        "figures" => harness::figures::run(&args),
+        "parallel" => harness::parallel::run(&args),
+        "train" => harness::train::run(&args),
+        "validate" => harness::validate::run(&args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = PipelineConfig::from_args(args)?;
+    if cfg.out_dir.is_none() {
+        cfg.out_dir = Some(std::path::PathBuf::from(format!(
+            "results/dataset_{}_{}",
+            cfg.family.label().to_lowercase(),
+            cfg.count
+        )));
+    }
+    let pipe = Pipeline::new(cfg);
+    let r = pipe.run()?;
+    let m = &r.metrics;
+    println!(
+        "family={} engine={} precond={} sort={} count={} n={}",
+        pipe.config().family.label(),
+        pipe.config().engine.label(),
+        pipe.config().precond.label(),
+        pipe.config().sort.label(),
+        m.systems,
+        pipe.family().num_unknowns(),
+    );
+    println!(
+        "gen {:.3}s  sort {:.3}s  solve {:.3}s (mean {:.4}s, {:.1} iters/system)  wall {:.3}s",
+        m.gen_seconds,
+        m.sort_seconds,
+        m.solve_seconds,
+        m.mean_time(),
+        m.mean_iters(),
+        m.wall_seconds
+    );
+    if m.max_iter_hits > 0 {
+        println!("WARNING: {} systems hit the iteration cap", m.max_iter_hits);
+    }
+    if let Some(ds) = &r.dataset {
+        println!("dataset: {} ({} samples)", ds.dir.display(), ds.count);
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "skr — Sorting + Krylov Recycling data generation for neural operators
+
+USAGE: skr <command> [--key value ...]
+
+COMMANDS
+  generate   run the pipeline, export .npy dataset
+             --family darcy|thermal|poisson|helmholtz --n 2500 --count 64
+             --engine skr|gmres --precond none|jacobi|bjacobi|sor|asm|icc|ilu
+             --sort greedy|none|grouped|hilbert|shuffle --tol 1e-8
+             --threads 1 --out DIR --seed 0
+  compare    SKR vs GMRES quick speedup readout (same flags)
+  table1     paper Table 1 (headline speedups)         [--full]
+  tables     paper Tables 3..30 sweeps                 [--family F] [--full]
+  ablation   paper Table 2 (sort ablation + delta)     [--full]
+  figures    paper Figs 1,4-5,7-13 data series         [--fig all|conv|similarity|sortpairs|f11|f12|f13]
+  parallel   paper Tables 31/32 (parallel + block)     [--threads N]
+  train      train the FNO on a dataset via PJRT       --data DIR [--steps N]
+  validate   paper Table 33 (dataset validity)         [--full]
+"
+    );
+}

@@ -1,0 +1,203 @@
+//! Dataset → FNO tensor conversion: load the pipeline's `.npy` export,
+//! bilinearly upsample input fields to the model grid, normalize, and
+//! produce train/test batches in the `[B, S, S, 1]` layout the AOT module
+//! expects.
+
+use crate::coordinator::dataset;
+use crate::util::prng::Rng;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A dataset resampled to the FNO grid, normalized, split and batchable.
+#[derive(Debug, Clone)]
+pub struct FnoDataset {
+    /// Model grid side S.
+    pub grid: usize,
+    /// Inputs `[count, S, S]` flattened, standardized.
+    pub inputs: Vec<f32>,
+    /// Targets `[count, S, S]` flattened, scaled by `target_scale`.
+    pub targets: Vec<f32>,
+    pub count: usize,
+    /// Multiply model outputs by this to recover solution units.
+    pub target_scale: f32,
+    /// Index split.
+    pub train_idx: Vec<usize>,
+    pub test_idx: Vec<usize>,
+}
+
+impl FnoDataset {
+    /// Load from a pipeline export, resampling fields to `grid`.
+    pub fn load(dir: &Path, grid: usize, test_fraction: f64, seed: u64) -> Result<FnoDataset> {
+        let (ins, sols, _meta) = dataset::load(dir).context("loading dataset")?;
+        let count = ins.shape[0];
+        if sols.shape[0] != count {
+            bail!("inputs/solutions count mismatch");
+        }
+        let in_side = int_sqrt(ins.shape[1])
+            .with_context(|| format!("input dim {} is not a square grid", ins.shape[1]))?;
+        let sol_side = int_sqrt(sols.shape[1])
+            .with_context(|| format!("solution dim {} is not a square grid", sols.shape[1]))?;
+
+        // Resample both to the model grid.
+        let mut inputs = Vec::with_capacity(count * grid * grid);
+        let mut targets = Vec::with_capacity(count * grid * grid);
+        for i in 0..count {
+            let a = &ins.data[i * in_side * in_side..(i + 1) * in_side * in_side];
+            let b = &sols.data[i * sol_side * sol_side..(i + 1) * sol_side * sol_side];
+            inputs.extend(bilinear(a, in_side, grid).into_iter().map(|v| v as f32));
+            targets.extend(bilinear(b, sol_side, grid).into_iter().map(|v| v as f32));
+        }
+
+        // Standardize inputs, scale targets to ~unit std.
+        standardize(&mut inputs);
+        let tstd = std_of(&targets).max(1e-12);
+        for t in targets.iter_mut() {
+            *t /= tstd;
+        }
+
+        // Split.
+        let mut rng = Rng::new(seed);
+        let mut idx = rng.permutation(count);
+        let ntest = ((count as f64) * test_fraction).round() as usize;
+        let test_idx = idx.split_off(count - ntest.min(count));
+        Ok(FnoDataset {
+            grid,
+            inputs,
+            targets,
+            count,
+            target_scale: tstd,
+            train_idx: idx,
+            test_idx,
+        })
+    }
+
+    /// Assemble batch tensors `[B, S, S, 1]` for the given sample indices.
+    pub fn batch(&self, ids: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let gg = self.grid * self.grid;
+        let mut x = Vec::with_capacity(ids.len() * gg);
+        let mut y = Vec::with_capacity(ids.len() * gg);
+        for &i in ids {
+            x.extend_from_slice(&self.inputs[i * gg..(i + 1) * gg]);
+            y.extend_from_slice(&self.targets[i * gg..(i + 1) * gg]);
+        }
+        (x, y)
+    }
+
+    /// Mean relative L2 between predictions and targets for `ids`
+    /// (scale-invariant, so usable directly on normalized units).
+    pub fn relative_l2(&self, ids: &[usize], preds: &[f32]) -> f64 {
+        let gg = self.grid * self.grid;
+        let mut total = 0.0;
+        for (bi, &i) in ids.iter().enumerate() {
+            let t = &self.targets[i * gg..(i + 1) * gg];
+            let p = &preds[bi * gg..(bi + 1) * gg];
+            let mut d2 = 0.0f64;
+            let mut n2 = 0.0f64;
+            for (a, b) in p.iter().zip(t) {
+                d2 += (*a as f64 - *b as f64).powi(2);
+                n2 += (*b as f64).powi(2);
+            }
+            total += (d2.sqrt()) / (n2.sqrt() + 1e-8);
+        }
+        total / ids.len().max(1) as f64
+    }
+}
+
+fn int_sqrt(n: usize) -> Option<usize> {
+    let s = (n as f64).sqrt().round() as usize;
+    (s * s == n).then_some(s)
+}
+
+/// Bilinear resample a row-major `src`-side square field to `dst` side.
+pub fn bilinear(field: &[f64], src: usize, dst: usize) -> Vec<f64> {
+    assert_eq!(field.len(), src * src);
+    if src == dst {
+        return field.to_vec();
+    }
+    let mut out = Vec::with_capacity(dst * dst);
+    let scale = (src.max(1) - 1) as f64 / (dst.max(2) - 1) as f64;
+    for r in 0..dst {
+        let fr = r as f64 * scale;
+        let r0 = fr.floor() as usize;
+        let r1 = (r0 + 1).min(src - 1);
+        let wr = fr - r0 as f64;
+        for c in 0..dst {
+            let fc = c as f64 * scale;
+            let c0 = fc.floor() as usize;
+            let c1 = (c0 + 1).min(src - 1);
+            let wc = fc - c0 as f64;
+            let v = field[r0 * src + c0] * (1.0 - wr) * (1.0 - wc)
+                + field[r0 * src + c1] * (1.0 - wr) * wc
+                + field[r1 * src + c0] * wr * (1.0 - wc)
+                + field[r1 * src + c1] * wr * wc;
+            out.push(v);
+        }
+    }
+    out
+}
+
+fn standardize(xs: &mut [f32]) {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = xs.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    let inv = 1.0 / var.sqrt().max(1e-12);
+    for v in xs.iter_mut() {
+        *v = ((*v as f64 - mean) * inv) as f32;
+    }
+}
+
+fn std_of(xs: &[f32]) -> f32 {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = xs.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bilinear_identity_and_constant() {
+        let f = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(bilinear(&f, 2, 2), f);
+        let c = vec![5.0; 9];
+        let up = bilinear(&c, 3, 7);
+        assert!(up.iter().all(|&v| (v - 5.0).abs() < 1e-12));
+        assert_eq!(up.len(), 49);
+    }
+
+    #[test]
+    fn bilinear_preserves_corners() {
+        let f = vec![0.0, 1.0, 2.0, 3.0]; // 2x2
+        let up = bilinear(&f, 2, 5);
+        assert!((up[0] - 0.0).abs() < 1e-12);
+        assert!((up[4] - 1.0).abs() < 1e-12);
+        assert!((up[20] - 2.0).abs() < 1e-12);
+        assert!((up[24] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_roundtrip_via_pipeline_export() {
+        use crate::coordinator::{Pipeline, PipelineConfig};
+        let dir = std::env::temp_dir().join("skr_fno_ds");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = PipelineConfig::default();
+        cfg.unknowns = 64; // 8x8 grid
+        cfg.count = 10;
+        cfg.out_dir = Some(dir.clone());
+        Pipeline::new(cfg).run().unwrap();
+        let ds = FnoDataset::load(&dir, 16, 0.2, 0).unwrap();
+        assert_eq!(ds.count, 10);
+        assert_eq!(ds.train_idx.len(), 8);
+        assert_eq!(ds.test_idx.len(), 2);
+        let (x, y) = ds.batch(&ds.train_idx[..2].to_vec());
+        assert_eq!(x.len(), 2 * 16 * 16);
+        assert_eq!(y.len(), 2 * 16 * 16);
+        assert!(x.iter().all(|v| v.is_finite()));
+        // perfect predictions give ~zero error
+        let ids = [0usize, 1];
+        let (_, t) = ds.batch(&ids);
+        assert!(ds.relative_l2(&ids, &t) < 1e-9);
+    }
+}

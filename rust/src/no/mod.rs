@@ -1,0 +1,9 @@
+//! Neural-operator integration: dataset → FNO tensors ([`data`]) and the
+//! training loop over the AOT-compiled train step ([`trainer`]). Used by the
+//! end-to-end example and the Table-33 validity experiment.
+
+pub mod data;
+pub mod trainer;
+
+pub use data::FnoDataset;
+pub use trainer::{TrainReport, Trainer};

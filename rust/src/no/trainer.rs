@@ -1,0 +1,98 @@
+//! FNO training loop over the PJRT runtime: mini-batch Adam on a generated
+//! dataset, periodic test-set evaluation, loss-curve logging — the engine of
+//! the Table-33 dataset-validity experiment and the end-to-end example.
+
+use super::data::FnoDataset;
+use crate::runtime::FnoRuntime;
+use crate::util::prng::Rng;
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// Training outcome.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// (step, train loss) samples.
+    pub losses: Vec<(usize, f64)>,
+    /// (step, test relative L2) evaluations.
+    pub test_curve: Vec<(usize, f64)>,
+    pub final_test_rel_l2: f64,
+    pub steps: usize,
+    pub seconds: f64,
+}
+
+/// Configurable trainer.
+pub struct Trainer {
+    pub steps: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub log: bool,
+}
+
+impl Default for Trainer {
+    fn default() -> Self {
+        Trainer { steps: 300, eval_every: 50, seed: 0, log: false }
+    }
+}
+
+impl Trainer {
+    /// Train `fno` on `ds`; both must share the same grid side.
+    pub fn train(&self, fno: &mut FnoRuntime, ds: &FnoDataset) -> Result<TrainReport> {
+        anyhow::ensure!(
+            fno.manifest.grid == ds.grid,
+            "model grid {} != dataset grid {}",
+            fno.manifest.grid,
+            ds.grid
+        );
+        let b = fno.manifest.batch;
+        anyhow::ensure!(ds.train_idx.len() >= b, "dataset smaller than one batch");
+        let timer = Timer::start();
+        let mut rng = Rng::new(self.seed);
+        let mut losses = Vec::new();
+        let mut test_curve = Vec::new();
+
+        for step in 0..self.steps {
+            // Sample a batch without replacement within the epoch position.
+            let ids: Vec<usize> =
+                (0..b).map(|_| ds.train_idx[rng.below(ds.train_idx.len())]).collect();
+            let (x, y) = ds.batch(&ids);
+            let loss = fno.train_step(&x, &y)? as f64;
+            losses.push((step, loss));
+            if self.log && step % 20 == 0 {
+                eprintln!("step {step:4}  loss {loss:.4}");
+            }
+            if (step + 1) % self.eval_every == 0 || step + 1 == self.steps {
+                let err = self.evaluate(fno, ds)?;
+                test_curve.push((step + 1, err));
+                if self.log {
+                    eprintln!("step {:4}  test rel-L2 {err:.4}", step + 1);
+                }
+            }
+        }
+        let final_test_rel_l2 = test_curve.last().map(|&(_, e)| e).unwrap_or(f64::NAN);
+        Ok(TrainReport {
+            losses,
+            test_curve,
+            final_test_rel_l2,
+            steps: self.steps,
+            seconds: timer.secs(),
+        })
+    }
+
+    /// Mean relative L2 over the test split (full batches only).
+    pub fn evaluate(&self, fno: &FnoRuntime, ds: &FnoDataset) -> Result<f64> {
+        let b = fno.manifest.batch;
+        let mut total = 0.0;
+        let mut batches = 0;
+        for chunk in ds.test_idx.chunks(b) {
+            if chunk.len() < b {
+                break; // fixed-shape AOT module: skip the ragged tail
+            }
+            let (x, _) = ds.batch(chunk);
+            let preds = fno.predict(&x)?;
+            total += ds.relative_l2(chunk, &preds);
+            batches += 1;
+        }
+        anyhow::ensure!(batches > 0, "test split smaller than one batch");
+        Ok(total / batches as f64)
+    }
+}

@@ -1,0 +1,96 @@
+//! Truncated Chebyshev-polynomial random fields — the paper's parameter
+//! source for the Poisson family (boundary data and right-hand side are
+//! generated from truncated Chebyshev series; their coefficients form the
+//! sort key).
+
+use crate::util::prng::Rng;
+
+/// A 1-D truncated Chebyshev series on [-1, 1].
+#[derive(Debug, Clone)]
+pub struct Cheb1 {
+    pub coeffs: Vec<f64>,
+}
+
+impl Cheb1 {
+    /// Random series with `deg+1` coefficients decaying like 1/(j+1).
+    pub fn random(deg: usize, rng: &mut Rng) -> Cheb1 {
+        let coeffs = (0..=deg).map(|j| rng.normal() / (j as f64 + 1.0)).collect();
+        Cheb1 { coeffs }
+    }
+
+    /// Evaluate at x ∈ [-1, 1] by Clenshaw recurrence.
+    pub fn eval(&self, x: f64) -> f64 {
+        let mut b1 = 0.0;
+        let mut b2 = 0.0;
+        for &c in self.coeffs.iter().rev() {
+            let b0 = 2.0 * x * b1 - b2 + c;
+            b2 = b1;
+            b1 = b0;
+        }
+        // Clenshaw for Chebyshev: f = b1 - x*b2 ... using T_n convention:
+        b1 - x * b2
+    }
+}
+
+/// A separable 2-D field f(x,y) = Σᵢ gᵢ(x)·hᵢ(y) from a few random 1-D series.
+#[derive(Debug, Clone)]
+pub struct Cheb2 {
+    pub gx: Vec<Cheb1>,
+    pub hy: Vec<Cheb1>,
+}
+
+impl Cheb2 {
+    pub fn random(rank: usize, deg: usize, rng: &mut Rng) -> Cheb2 {
+        Cheb2 {
+            gx: (0..rank).map(|_| Cheb1::random(deg, rng)).collect(),
+            hy: (0..rank).map(|_| Cheb1::random(deg, rng)).collect(),
+        }
+    }
+
+    /// Evaluate at (x, y) ∈ [-1,1]².
+    pub fn eval(&self, x: f64, y: f64) -> f64 {
+        self.gx.iter().zip(&self.hy).map(|(g, h)| g.eval(x) * h.eval(y)).sum()
+    }
+
+    /// Flattened coefficient vector (the sorting key).
+    pub fn param_vec(&self) -> Vec<f64> {
+        let mut v = Vec::new();
+        for g in &self.gx {
+            v.extend_from_slice(&g.coeffs);
+        }
+        for h in &self.hy {
+            v.extend_from_slice(&h.coeffs);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clenshaw_matches_direct_for_low_orders() {
+        // T0=1, T1=x, T2=2x²−1.
+        let c = Cheb1 { coeffs: vec![1.0, 2.0, 3.0] };
+        for &x in &[-1.0, -0.3, 0.0, 0.5, 1.0] {
+            let direct = 1.0 + 2.0 * x + 3.0 * (2.0 * x * x - 1.0);
+            assert!((c.eval(x) - direct).abs() < 1e-12, "x={x}");
+        }
+    }
+
+    #[test]
+    fn param_vec_lengths() {
+        let mut rng = Rng::new(4);
+        let f = Cheb2::random(3, 4, &mut rng);
+        assert_eq!(f.param_vec().len(), 2 * 3 * 5);
+    }
+
+    #[test]
+    fn separable_eval() {
+        let g = Cheb1 { coeffs: vec![0.0, 1.0] }; // g(x) = x
+        let h = Cheb1 { coeffs: vec![0.0, 1.0] };
+        let f = Cheb2 { gx: vec![g], hy: vec![h] };
+        assert!((f.eval(0.5, -0.25) + 0.125).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,157 @@
+//! Radix-2 complex FFT (iterative Cooley–Tukey) — substrate for the
+//! spectral Gaussian-random-field sampler. Sizes are powers of two chosen by
+//! the problem generators, so a radix-2 kernel is sufficient.
+
+use crate::la::C64;
+
+/// In-place forward FFT of length 2^p.
+pub fn fft(x: &mut [C64]) {
+    transform(x, false);
+}
+
+/// In-place inverse FFT (normalized by 1/n).
+pub fn ifft(x: &mut [C64]) {
+    transform(x, true);
+    let inv = 1.0 / x.len() as f64;
+    for v in x.iter_mut() {
+        *v = v.scale(inv);
+    }
+}
+
+fn transform(x: &mut [C64], inverse: bool) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two, got {n}");
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = C64::new(ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = C64::ONE;
+            for k in 0..len / 2 {
+                let u = x[i + k];
+                let v = x[i + k + len / 2] * w;
+                x[i + k] = u + v;
+                x[i + k + len / 2] = u - v;
+                w *= wlen;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// 2-D FFT over a row-major `n × n` grid, in place.
+pub fn fft2(x: &mut [C64], n: usize) {
+    assert_eq!(x.len(), n * n);
+    // Rows.
+    for r in 0..n {
+        fft(&mut x[r * n..(r + 1) * n]);
+    }
+    // Columns via transpose-fft-transpose.
+    transpose(x, n);
+    for r in 0..n {
+        fft(&mut x[r * n..(r + 1) * n]);
+    }
+    transpose(x, n);
+}
+
+/// 2-D inverse FFT, in place.
+pub fn ifft2(x: &mut [C64], n: usize) {
+    assert_eq!(x.len(), n * n);
+    for r in 0..n {
+        ifft(&mut x[r * n..(r + 1) * n]);
+    }
+    transpose(x, n);
+    for r in 0..n {
+        ifft(&mut x[r * n..(r + 1) * n]);
+    }
+    transpose(x, n);
+}
+
+fn transpose(x: &mut [C64], n: usize) {
+    for i in 0..n {
+        for j in i + 1..n {
+            x.swap(i * n + j, j * n + i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let orig: Vec<C64> = (0..64).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let mut x = orig.clone();
+        fft(&mut x);
+        ifft(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((*a - *b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn delta_transforms_to_ones() {
+        let mut x = vec![C64::ZERO; 8];
+        x[0] = C64::ONE;
+        fft(&mut x);
+        for v in &x {
+            assert!((*v - C64::ONE).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn single_mode_is_a_spike() {
+        // x[t] = exp(2πi·3t/16) → spectrum concentrated at bin 3.
+        let n = 16;
+        let mut x: Vec<C64> = (0..n)
+            .map(|t| {
+                let ph = 2.0 * std::f64::consts::PI * 3.0 * t as f64 / n as f64;
+                C64::new(ph.cos(), ph.sin())
+            })
+            .collect();
+        fft(&mut x);
+        for (k, v) in x.iter().enumerate() {
+            if k == 3 {
+                assert!((v.abs() - n as f64).abs() < 1e-10);
+            } else {
+                assert!(v.abs() < 1e-10, "bin {k} = {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn parseval_2d() {
+        let mut rng = Rng::new(2);
+        let n = 16;
+        let orig: Vec<C64> = (0..n * n).map(|_| C64::new(rng.normal(), 0.0)).collect();
+        let mut x = orig.clone();
+        fft2(&mut x, n);
+        let e_time: f64 = orig.iter().map(|z| z.norm_sqr()).sum();
+        let e_freq: f64 = x.iter().map(|z| z.norm_sqr()).sum::<f64>() / (n * n) as f64;
+        assert!((e_time - e_freq).abs() < 1e-8 * e_time);
+        ifft2(&mut x, n);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((*a - *b).abs() < 1e-10);
+        }
+    }
+}

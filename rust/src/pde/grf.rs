@@ -1,0 +1,140 @@
+//! Gaussian random fields on a periodic n×n grid via spectral synthesis —
+//! the parameter generator for the Darcy (permeability) and Helmholtz
+//! (wavenumber) families, mirroring the paper's GRF-sampled coefficients.
+//!
+//! The field has a squared-exponential-like power spectrum
+//! `S(k) ∝ (|k|² + τ²)^(−α)` (the standard FNO-Darcy construction); `α`
+//! controls smoothness, `τ` the correlation length.
+
+use super::fft::{fft2, ifft2};
+use crate::la::C64;
+use crate::util::prng::Rng;
+
+/// GRF sampler configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct GrfConfig {
+    /// Smoothness exponent (α > 1 for a.s. continuous fields).
+    pub alpha: f64,
+    /// Inverse correlation length.
+    pub tau: f64,
+}
+
+impl Default for GrfConfig {
+    fn default() -> Self {
+        GrfConfig { alpha: 2.0, tau: 3.0 }
+    }
+}
+
+/// Sample a zero-mean GRF on an n×n grid (n must be a power of two).
+/// Returns row-major values normalized to unit empirical std.
+pub fn sample(n: usize, cfg: &GrfConfig, rng: &mut Rng) -> Vec<f64> {
+    assert!(n.is_power_of_two(), "grf grid must be a power of two, got {n}");
+    // White noise in physical space.
+    let mut field: Vec<C64> = (0..n * n).map(|_| C64::new(rng.normal(), 0.0)).collect();
+    fft2(&mut field, n);
+    // Shape the spectrum.
+    for r in 0..n {
+        let kr = freq(r, n);
+        for c in 0..n {
+            let kc = freq(c, n);
+            let k2 = kr * kr + kc * kc;
+            let s = (k2 + cfg.tau * cfg.tau).powf(-cfg.alpha / 2.0);
+            field[r * n + c] = field[r * n + c].scale(s);
+        }
+    }
+    // Remove the mean (k = 0 mode).
+    field[0] = C64::ZERO;
+    ifft2(&mut field, n);
+    let mut out: Vec<f64> = field.iter().map(|z| z.re).collect();
+    // Normalize to unit std so downstream transforms (exp, affine) are stable.
+    let mean = out.iter().sum::<f64>() / out.len() as f64;
+    let var = out.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / out.len() as f64;
+    let inv = if var > 0.0 { 1.0 / var.sqrt() } else { 1.0 };
+    for v in &mut out {
+        *v = (*v - mean) * inv;
+    }
+    out
+}
+
+fn freq(i: usize, n: usize) -> f64 {
+    // FFT bin → signed integer frequency.
+    if i <= n / 2 {
+        i as f64
+    } else {
+        i as f64 - n as f64
+    }
+}
+
+/// Downsample (or keep) a GRF from a `src`-sized grid to `dst` (dst ≤ src,
+/// src divisible by dst) by strided sampling — used when the PDE grid is not
+/// a power of two.
+pub fn resample(field: &[f64], src: usize, dst: usize) -> Vec<f64> {
+    assert_eq!(field.len(), src * src);
+    if src == dst {
+        return field.to_vec();
+    }
+    let mut out = Vec::with_capacity(dst * dst);
+    for r in 0..dst {
+        for c in 0..dst {
+            let sr = r * src / dst;
+            let sc = c * src / dst;
+            out.push(field[sr * src + sc]);
+        }
+    }
+    out
+}
+
+/// Smallest power of two ≥ x.
+pub fn next_pow2(x: usize) -> usize {
+    x.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_variance_zero_mean() {
+        let mut rng = Rng::new(7);
+        let f = sample(32, &GrfConfig::default(), &mut rng);
+        let mean = f.iter().sum::<f64>() / f.len() as f64;
+        let var = f.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / f.len() as f64;
+        assert!(mean.abs() < 1e-10);
+        assert!((var - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn smoothness_increases_with_alpha() {
+        // Mean squared neighbour difference should shrink as alpha grows.
+        let rough_cfg = GrfConfig { alpha: 1.2, tau: 3.0 };
+        let smooth_cfg = GrfConfig { alpha: 4.0, tau: 3.0 };
+        let rough = sample(64, &rough_cfg, &mut Rng::new(3));
+        let smooth = sample(64, &smooth_cfg, &mut Rng::new(3));
+        let grad2 = |f: &[f64]| {
+            let n = 64;
+            let mut s = 0.0;
+            for r in 0..n {
+                for c in 0..n - 1 {
+                    let d = f[r * n + c + 1] - f[r * n + c];
+                    s += d * d;
+                }
+            }
+            s
+        };
+        assert!(grad2(&smooth) < grad2(&rough), "{} vs {}", grad2(&smooth), grad2(&rough));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = sample(16, &GrfConfig::default(), &mut Rng::new(9));
+        let b = sample(16, &GrfConfig::default(), &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn resample_strides() {
+        let src: Vec<f64> = (0..16).map(|i| i as f64).collect(); // 4x4
+        let d = resample(&src, 4, 2);
+        assert_eq!(d, vec![0.0, 2.0, 8.0, 10.0]);
+    }
+}

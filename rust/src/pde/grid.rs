@@ -1,0 +1,66 @@
+//! Structured-grid helpers for the FDM/FVM problem families: interior-point
+//! indexing on the unit square with Dirichlet boundaries.
+
+/// An n×n interior grid on the unit square (boundary nodes eliminated).
+#[derive(Debug, Clone, Copy)]
+pub struct Grid {
+    /// Interior points per direction.
+    pub n: usize,
+    /// Mesh spacing h = 1 / (n + 1).
+    pub h: f64,
+}
+
+impl Grid {
+    pub fn new(n: usize) -> Grid {
+        Grid { n, h: 1.0 / (n as f64 + 1.0) }
+    }
+
+    /// Total unknowns.
+    pub fn size(&self) -> usize {
+        self.n * self.n
+    }
+
+    /// Row-major linear index of interior point (i, j), 0-based.
+    #[inline]
+    pub fn idx(&self, i: usize, j: usize) -> usize {
+        i * self.n + j
+    }
+
+    /// Physical coordinates of interior point (i, j) in (0,1)².
+    #[inline]
+    pub fn xy(&self, i: usize, j: usize) -> (f64, f64) {
+        ((i as f64 + 1.0) * self.h, (j as f64 + 1.0) * self.h)
+    }
+
+    /// Choose the interior side length whose unknown count is closest to
+    /// `target` (the paper reports matrix sizes like 2500, 6400, 10000 —
+    /// i.e. 50², 80², 100²).
+    pub fn for_unknowns(target: usize) -> Grid {
+        let side = (target as f64).sqrt().round().max(2.0) as usize;
+        Grid::new(side)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let g = Grid::new(5);
+        assert_eq!(g.size(), 25);
+        assert_eq!(g.idx(0, 0), 0);
+        assert_eq!(g.idx(4, 4), 24);
+        let (x, y) = g.xy(0, 0);
+        assert!((x - g.h).abs() < 1e-15 && (y - g.h).abs() < 1e-15);
+        let (x, y) = g.xy(4, 4);
+        assert!((x - 5.0 * g.h).abs() < 1e-15 && (y - 5.0 * g.h).abs() < 1e-15);
+    }
+
+    #[test]
+    fn for_unknowns_hits_paper_sizes() {
+        assert_eq!(Grid::for_unknowns(2500).size(), 2500);
+        assert_eq!(Grid::for_unknowns(6400).size(), 6400);
+        assert_eq!(Grid::for_unknowns(10000).size(), 10000);
+    }
+}

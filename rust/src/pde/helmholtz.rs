@@ -1,0 +1,144 @@
+//! Helmholtz equation ∇²u + k(x,y)²u = f on the unit square with Dirichlet
+//! boundaries; the wavenumber field k is GRF-derived (paper Appendix D.2.4),
+//! making the discrete operator indefinite and nonsymmetric-hard for GMRES —
+//! the family where the paper reports its largest speedups.
+
+use super::grf::{self, GrfConfig};
+use super::grid::Grid;
+use super::ProblemFamily;
+use crate::la::Csr;
+use crate::solver::LinearSystem;
+use crate::util::prng::Rng;
+use anyhow::Result;
+
+/// Helmholtz problem generator.
+#[derive(Debug, Clone)]
+pub struct HelmholtzFamily {
+    grid: Grid,
+    /// Base wavenumber k₀ (higher ⇒ more indefinite ⇒ harder).
+    pub k0: f64,
+    /// Relative GRF modulation amplitude of k.
+    pub amplitude: f64,
+    pub grf: GrfConfig,
+    /// Side of the coarse parameter grid (sort key).
+    pub param_side: usize,
+}
+
+impl HelmholtzFamily {
+    pub fn new(interior_side: usize) -> HelmholtzFamily {
+        HelmholtzFamily {
+            grid: Grid::new(interior_side),
+            k0: 12.0,
+            amplitude: 0.25,
+            grf: GrfConfig::default(),
+            param_side: 16,
+        }
+    }
+
+    pub fn with_unknowns(unknowns: usize) -> HelmholtzFamily {
+        HelmholtzFamily::new(Grid::for_unknowns(unknowns).n)
+    }
+}
+
+impl ProblemFamily for HelmholtzFamily {
+    fn name(&self) -> &'static str {
+        "helmholtz"
+    }
+
+    fn num_unknowns(&self) -> usize {
+        self.grid.size()
+    }
+
+    fn sample(&self, id: usize, rng: &mut Rng) -> Result<LinearSystem> {
+        let n = self.grid.n;
+        let h2 = self.grid.h * self.grid.h;
+        // k(x,y) = k₀ (1 + a·GRF), sampled on the interior grid.
+        let p2 = grf::next_pow2(n);
+        let raw = grf::sample(p2, &self.grf, rng);
+        let field = grf::resample(&raw, p2, n);
+        let kvals: Vec<f64> = field.iter().map(|v| self.k0 * (1.0 + self.amplitude * v)).collect();
+
+        let mut trips = Vec::with_capacity(5 * n * n);
+        let mut b = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let row = self.grid.idx(i, j);
+                let k2 = kvals[row] * kvals[row];
+                trips.push((row, row, -4.0 / h2 + k2));
+                if i > 0 {
+                    trips.push((row, self.grid.idx(i - 1, j), 1.0 / h2));
+                }
+                if i + 1 < n {
+                    trips.push((row, self.grid.idx(i + 1, j), 1.0 / h2));
+                }
+                if j > 0 {
+                    trips.push((row, self.grid.idx(i, j - 1), 1.0 / h2));
+                }
+                if j + 1 < n {
+                    trips.push((row, self.grid.idx(i, j + 1), 1.0 / h2));
+                }
+                // Point-source forcing: localized Gaussian beam, fixed across
+                // samples (the variation lives in k).
+                let (x, y) = self.grid.xy(i, j);
+                let d2 = (x - 0.5) * (x - 0.5) + (y - 0.5) * (y - 0.5);
+                b[row] = (-d2 / 0.01).exp();
+            }
+        }
+        let a = Csr::from_triplets(n * n, n * n, &trips);
+        let coarse = grf::resample(&kvals, n, self.param_side.min(n));
+        Ok(LinearSystem { id, a, b, params: coarse })
+    }
+
+    fn sample_params(&self, _id: usize, rng: &mut Rng) -> Result<Vec<f64>> {
+        let n = self.grid.n;
+        let p2 = grf::next_pow2(n);
+        let raw = grf::sample(p2, &self.grf, rng);
+        let field = grf::resample(&raw, p2, n);
+        let kvals: Vec<f64> =
+            field.iter().map(|v| self.k0 * (1.0 + self.amplitude * v)).collect();
+        Ok(grf::resample(&kvals, n, self.param_side.min(n)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precond::Identity;
+    use crate::solver::{gmres, SolverConfig};
+
+    #[test]
+    fn operator_is_indefinite_shift_of_laplacian() {
+        let fam = HelmholtzFamily::new(10);
+        let sys = fam.sample(0, &mut Rng::new(1)).unwrap();
+        // Diagonal = −4/h² + k², so every diagonal entry sits strictly above
+        // the pure-Laplacian value and below −4/h² + (large multiple of k0)².
+        let h2 = fam.grid.h * fam.grid.h;
+        let lo = -4.0 / h2;
+        let hi = -4.0 / h2 + (8.0 * fam.k0).powi(2);
+        for &d in &sys.a.diag() {
+            assert!(d > lo && d < hi, "{d} outside ({lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn solvable_but_slower_than_poisson_analogue() {
+        let fam = HelmholtzFamily::new(14);
+        let sys = fam.sample(0, &mut Rng::new(2)).unwrap();
+        let mut x = vec![0.0; sys.b.len()];
+        let cfg = SolverConfig::default().with_tol(1e-8).with_max_iters(100_000);
+        let s = gmres(&sys.a, &sys.b, &mut x, &Identity, &cfg);
+        assert!(s.converged(), "{s:?}");
+        assert!(s.iters > 10, "should be nontrivial: {}", s.iters);
+    }
+
+    #[test]
+    fn params_are_the_wavenumber_field() {
+        let fam = HelmholtzFamily::new(20);
+        let sys = fam.sample(0, &mut Rng::new(3)).unwrap();
+        assert_eq!(sys.params.len(), 16 * 16);
+        // All k values near k0.
+        for &k in &sys.params {
+            assert!(k > 0.0 && k < 2.5 * fam.k0);
+        }
+    }
+}

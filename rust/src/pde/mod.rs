@@ -1,0 +1,184 @@
+//! PDE problem families — the paper's four datasets (Appendix D.2), each a
+//! generator of *parameterized* sparse linear systems:
+//!
+//! | Family     | PDE                                | Discretization | Parameters (sort key)       |
+//! |------------|------------------------------------|----------------|-----------------------------|
+//! | Darcy      | −∇·(K∇h) = f, K lognormal GRF      | FVM 5-point    | GRF permeability field      |
+//! | Thermal    | ΔT = 0, irregular domain           | P1 FEM         | boundary temperatures       |
+//! | Poisson    | Δu = f, Chebyshev data             | FDM 5-point    | Chebyshev coefficients      |
+//! | Helmholtz  | Δu + k²u = f, k from GRF           | FDM 5-point    | GRF wavenumber field        |
+
+pub mod chebyshev;
+pub mod darcy;
+pub mod fem;
+pub mod fft;
+pub mod grf;
+pub mod grid;
+pub mod helmholtz;
+pub mod poisson;
+pub mod thermal;
+
+use crate::solver::LinearSystem;
+use crate::util::prng::Rng;
+use anyhow::Result;
+
+/// A family of PDE problems sharing structure but varying in parameters —
+/// the unit the coordinator's pipeline generates, sorts and solves.
+pub trait ProblemFamily: Send + Sync {
+    /// Family tag (e.g. "darcy").
+    fn name(&self) -> &'static str;
+
+    /// Number of unknowns per system for this configuration.
+    fn num_unknowns(&self) -> usize;
+
+    /// Sample the `id`-th problem instance with an independent RNG stream.
+    fn sample(&self, id: usize, rng: &mut Rng) -> Result<LinearSystem>;
+
+    /// Sample only the parameter vector of instance `id` — must draw from
+    /// `rng` exactly like [`ProblemFamily::sample`] so the two agree. The
+    /// pipeline uses this cheap pass to sort before any matrix is assembled.
+    fn sample_params(&self, id: usize, rng: &mut Rng) -> Result<Vec<f64>> {
+        Ok(self.sample(id, rng)?.params)
+    }
+
+    /// Side length of the field grid for dataset export (0 when the family
+    /// is not grid-structured, e.g. FEM).
+    fn field_side(&self) -> usize {
+        let n = (self.num_unknowns() as f64).sqrt() as usize;
+        if n * n == self.num_unknowns() {
+            n
+        } else {
+            0
+        }
+    }
+
+    /// The input-field values (e.g. permeability) paired with a solution for
+    /// NO training export; default: the raw parameter vector.
+    fn input_field(&self, sys: &LinearSystem) -> Vec<f64> {
+        sys.params.clone()
+    }
+}
+
+/// Which of the paper's four datasets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FamilyKind {
+    Darcy,
+    Thermal,
+    Poisson,
+    Helmholtz,
+}
+
+impl FamilyKind {
+    pub const ALL: [FamilyKind; 4] =
+        [FamilyKind::Darcy, FamilyKind::Thermal, FamilyKind::Poisson, FamilyKind::Helmholtz];
+
+    pub fn parse(s: &str) -> Result<FamilyKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "darcy" => FamilyKind::Darcy,
+            "thermal" => FamilyKind::Thermal,
+            "poisson" => FamilyKind::Poisson,
+            "helmholtz" => FamilyKind::Helmholtz,
+            other => anyhow::bail!("unknown family {other:?}"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FamilyKind::Darcy => "Darcy",
+            FamilyKind::Thermal => "Thermal",
+            FamilyKind::Poisson => "Poisson",
+            FamilyKind::Helmholtz => "Helmholtz",
+        }
+    }
+
+    /// Build the family with approximately `unknowns` unknowns.
+    pub fn build(&self, unknowns: usize) -> Box<dyn ProblemFamily> {
+        self.build_with(unknowns, None)
+    }
+
+    /// Like [`FamilyKind::build`] with an optional GRF smoothness override
+    /// for the GRF-driven families (no-op for the others).
+    pub fn build_with(&self, unknowns: usize, grf_alpha: Option<f64>) -> Box<dyn ProblemFamily> {
+        match self {
+            FamilyKind::Darcy => {
+                let mut f = darcy::DarcyFamily::with_unknowns(unknowns);
+                if let Some(a) = grf_alpha {
+                    f.grf.alpha = a;
+                }
+                Box::new(f)
+            }
+            FamilyKind::Thermal => Box::new(thermal::ThermalFamily::with_unknowns(unknowns)),
+            FamilyKind::Poisson => Box::new(poisson::PoissonFamily::with_unknowns(unknowns)),
+            FamilyKind::Helmholtz => {
+                let mut f = helmholtz::HelmholtzFamily::with_unknowns(unknowns);
+                if let Some(a) = grf_alpha {
+                    f.grf.alpha = a;
+                }
+                Box::new(f)
+            }
+        }
+    }
+}
+
+/// Generate `count` problem instances with per-instance RNG streams derived
+/// from `seed` (instance i is identical no matter how many are drawn or in
+/// which order — required for the pipeline's parallel generation stage).
+pub fn generate(family: &dyn ProblemFamily, count: usize, seed: u64) -> Result<Vec<LinearSystem>> {
+    let master = Rng::new(seed);
+    (0..count)
+        .map(|i| {
+            let mut rng = master.split(i as u64);
+            family.sample(i, &mut rng)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_parse_roundtrip() {
+        for f in FamilyKind::ALL {
+            assert_eq!(FamilyKind::parse(f.label()).unwrap(), f);
+        }
+        assert!(FamilyKind::parse("wave").is_err());
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_streamed() {
+        let fam = FamilyKind::Darcy.build(100);
+        let a = generate(fam.as_ref(), 3, 7).unwrap();
+        let b = generate(fam.as_ref(), 5, 7).unwrap();
+        // The first 3 of a 5-batch must equal the 3-batch (stream independence).
+        for i in 0..3 {
+            assert_eq!(a[i].b, b[i].b, "instance {i}");
+            assert_eq!(a[i].params, b[i].params);
+        }
+    }
+
+    #[test]
+    fn sample_params_agrees_with_sample() {
+        for kind in FamilyKind::ALL {
+            let fam = kind.build(120);
+            let master = Rng::new(99);
+            let full = fam.sample(0, &mut master.split(0)).unwrap();
+            let cheap = fam.sample_params(0, &mut master.split(0)).unwrap();
+            assert_eq!(full.params, cheap, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn all_families_produce_valid_systems() {
+        for kind in FamilyKind::ALL {
+            let fam = kind.build(150);
+            let sys = generate(fam.as_ref(), 2, 1).unwrap();
+            for s in &sys {
+                s.a.validate().unwrap();
+                assert_eq!(s.a.nrows(), s.b.len());
+                assert!(!s.params.is_empty(), "{kind:?} has empty params");
+                assert!(s.b.iter().any(|v| *v != 0.0), "{kind:?} has zero rhs");
+            }
+        }
+    }
+}

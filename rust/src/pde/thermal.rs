@@ -1,0 +1,111 @@
+//! Thermal steady state: ΔT = 0 on an irregular annular-sector domain (P1
+//! FEM, paper Appendix D.2.2). The inner ("left") and outer ("right")
+//! boundary temperatures are uniform random values in [−100, 0] and
+//! [0, 100]; those two values are the sort key.
+
+use super::fem::{assemble_laplace, Mesh};
+use super::ProblemFamily;
+use crate::solver::LinearSystem;
+use crate::util::prng::Rng;
+use anyhow::Result;
+
+/// Thermal problem generator (FEM on a fixed irregular mesh; the boundary
+/// data varies per sample).
+pub struct ThermalFamily {
+    mesh: Mesh,
+    unknowns: usize,
+}
+
+impl ThermalFamily {
+    pub fn new(nr: usize, nth: usize) -> ThermalFamily {
+        // Wavy outer boundary + radial grading: thin boundary-layer elements
+        // give the stiffness matrix the conditioning of the paper's
+        // irregular thermal mesh (GMRES baseline in the thousands of
+        // iterations unpreconditioned).
+        let mesh = Mesh::annular_sector_graded(nr, nth, 0.3, 2.5);
+        let unknowns = mesh.num_interior();
+        ThermalFamily { mesh, unknowns }
+    }
+
+    /// Pick (nr, nth) with interior count close to `unknowns`
+    /// (interior = (nr − 2) · nth with our tagging).
+    pub fn with_unknowns(unknowns: usize) -> ThermalFamily {
+        // Aspect ratio ~1:3 (radial thinner than angular), matching an
+        // annulus geometry.
+        let nr = ((unknowns as f64 / 3.0).sqrt().round() as usize + 2).max(4);
+        let nth = (unknowns / (nr - 2)).max(4);
+        ThermalFamily::new(nr, nth)
+    }
+
+    pub fn mesh(&self) -> &Mesh {
+        &self.mesh
+    }
+}
+
+impl ProblemFamily for ThermalFamily {
+    fn name(&self) -> &'static str {
+        "thermal"
+    }
+
+    fn num_unknowns(&self) -> usize {
+        self.unknowns
+    }
+
+    fn field_side(&self) -> usize {
+        0 // unstructured
+    }
+
+    fn sample(&self, id: usize, rng: &mut Rng) -> Result<LinearSystem> {
+        let t_inner = rng.uniform_in(-100.0, 0.0);
+        let t_outer = rng.uniform_in(0.0, 100.0);
+        let sys = assemble_laplace(&self.mesh, &move |grp| if grp == 0 { t_inner } else { t_outer })?;
+        Ok(LinearSystem { id, a: sys.a, b: sys.b, params: vec![t_inner, t_outer] })
+    }
+
+    fn sample_params(&self, _id: usize, rng: &mut Rng) -> Result<Vec<f64>> {
+        let t_inner = rng.uniform_in(-100.0, 0.0);
+        let t_outer = rng.uniform_in(0.0, 100.0);
+        Ok(vec![t_inner, t_outer])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precond::Identity;
+    use crate::solver::{gmres, SolverConfig};
+
+    #[test]
+    fn unknown_count_is_close_to_target() {
+        for target in [200usize, 1000] {
+            let fam = ThermalFamily::with_unknowns(target);
+            let got = fam.num_unknowns();
+            assert!(
+                (got as f64) > 0.5 * target as f64 && (got as f64) < 2.0 * target as f64,
+                "target {target} got {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn solution_between_boundary_temperatures() {
+        let fam = ThermalFamily::new(8, 24);
+        let sys = fam.sample(0, &mut Rng::new(11)).unwrap();
+        let (tin, tout) = (sys.params[0], sys.params[1]);
+        let mut x = vec![0.0; sys.b.len()];
+        let s = gmres(&sys.a, &sys.b, &mut x, &Identity, &SolverConfig::default().with_tol(1e-11));
+        assert!(s.converged());
+        for &v in &x {
+            assert!(v >= tin - 1e-6 && v <= tout + 1e-6, "{v} outside [{tin},{tout}]");
+        }
+    }
+
+    #[test]
+    fn params_are_two_temperatures() {
+        let fam = ThermalFamily::new(6, 12);
+        let sys = fam.sample(3, &mut Rng::new(2)).unwrap();
+        assert_eq!(sys.params.len(), 2);
+        assert!((-100.0..=0.0).contains(&sys.params[0]));
+        assert!((0.0..=100.0).contains(&sys.params[1]));
+    }
+}

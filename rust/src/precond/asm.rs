@@ -1,0 +1,138 @@
+//! Overlapping additive Schwarz (ASM) preconditioner.
+//!
+//! Contiguous row blocks extended by `overlap` rows on each side; each local
+//! submatrix is solved by a local ILU(0). We use the *restricted* additive
+//! Schwarz update (solve on the overlapped domain, write back only the owned
+//! rows) — PETSc's default, which avoids double-counting in the overlap.
+
+use super::{Ilu0, Preconditioner};
+use crate::la::Csr;
+use anyhow::Result;
+
+/// Restricted additive Schwarz with local ILU(0) solves.
+pub struct Asm {
+    /// Owned (non-overlapping) range per block.
+    owned: Vec<(usize, usize)>,
+    /// Extended (overlapped) range per block.
+    extended: Vec<(usize, usize)>,
+    /// Local ILU factorizations of the extended submatrices.
+    locals: Vec<Ilu0>,
+    /// Scratch sizing.
+    max_len: usize,
+}
+
+impl Asm {
+    pub fn new(a: &Csr, nblocks: usize, overlap: usize) -> Result<Asm> {
+        let n = a.nrows();
+        let nblocks = nblocks.clamp(1, n.max(1));
+        let base = n / nblocks;
+        let rem = n % nblocks;
+        let mut owned = Vec::with_capacity(nblocks);
+        let mut start = 0;
+        for b in 0..nblocks {
+            let len = base + usize::from(b < rem);
+            owned.push((start, start + len));
+            start += len;
+        }
+        let mut extended = Vec::with_capacity(nblocks);
+        let mut locals = Vec::with_capacity(nblocks);
+        let mut max_len = 0;
+        for &(s, e) in &owned {
+            let xs = s.saturating_sub(overlap);
+            let xe = (e + overlap).min(n);
+            extended.push((xs, xe));
+            max_len = max_len.max(xe - xs);
+            // Extract the local principal submatrix on [xs, xe).
+            let mut trips = Vec::new();
+            for i in xs..xe {
+                let (cols, vals) = a.row(i);
+                let mut has_diag = false;
+                for (&c, &v) in cols.iter().zip(vals) {
+                    if c >= xs && c < xe {
+                        trips.push((i - xs, c - xs, v));
+                        if c == i {
+                            has_diag = true;
+                        }
+                    }
+                }
+                if !has_diag {
+                    trips.push((i - xs, i - xs, 1.0));
+                }
+            }
+            let local = Csr::from_triplets(xe - xs, xe - xs, &trips);
+            locals.push(Ilu0::new(&local)?);
+        }
+        Ok(Asm { owned, extended, locals, max_len })
+    }
+}
+
+impl Preconditioner for Asm {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        let mut rloc = vec![0.0; self.max_len];
+        let mut zloc = vec![0.0; self.max_len];
+        for ((&(s, e), &(xs, xe)), local) in
+            self.owned.iter().zip(&self.extended).zip(&self.locals)
+        {
+            let len = xe - xs;
+            rloc[..len].copy_from_slice(&r[xs..xe]);
+            local.solve_into(&rloc[..len], &mut zloc[..len]);
+            // Restricted update: write only the owned rows.
+            z[s..e].copy_from_slice(&zloc[s - xs..e - xs]);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "asm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precond::testutil::{lap1d, nonsym};
+
+    #[test]
+    fn single_block_no_overlap_is_ilu() {
+        let a = nonsym(16);
+        let asm = Asm::new(&a, 1, 0).unwrap();
+        let ilu = Ilu0::new(&a).unwrap();
+        let r: Vec<f64> = (0..16).map(|i| (i as f64).sin()).collect();
+        let (mut z1, mut z2) = (vec![0.0; 16], vec![0.0; 16]);
+        asm.apply(&r, &mut z1);
+        ilu.apply(&r, &mut z2);
+        for (u, v) in z1.iter().zip(&z2) {
+            assert!((u - v).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn overlap_accelerates_gmres() {
+        // The meaningful property: as a preconditioner inside GMRES, ASM with
+        // overlap should need no more iterations than zero-overlap ASM.
+        use crate::solver::{gmres, SolverConfig};
+        let a = lap1d(128);
+        let with = Asm::new(&a, 8, 6).unwrap();
+        let without = Asm::new(&a, 8, 0).unwrap();
+        let b = vec![1.0; 128];
+        let cfg = SolverConfig::default().with_tol(1e-9);
+        let mut x1 = vec![0.0; 128];
+        let s1 = gmres(&a, &b, &mut x1, &with, &cfg);
+        let mut x2 = vec![0.0; 128];
+        let s2 = gmres(&a, &b, &mut x2, &without, &cfg);
+        assert!(s1.converged() && s2.converged());
+        assert!(s1.iters <= s2.iters, "overlap {} vs none {}", s1.iters, s2.iters);
+    }
+
+    #[test]
+    fn covers_all_rows_exactly_once() {
+        let a = lap1d(37);
+        let asm = Asm::new(&a, 5, 2).unwrap();
+        let mut covered = vec![0usize; 37];
+        for &(s, e) in &asm.owned {
+            for c in covered.iter_mut().take(e).skip(s) {
+                *c += 1;
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1));
+    }
+}

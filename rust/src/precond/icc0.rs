@@ -1,0 +1,180 @@
+//! ICC(0): incomplete Cholesky with zero fill-in.
+//!
+//! Defined for SPD matrices; the paper nevertheless reports ICC columns for
+//! nonsymmetric problems (PETSc applies it to a symmetric splitting), so for
+//! nonsymmetric input we factor the symmetric part ½(A+Aᵀ), with a diagonal
+//! shift escalated until the incomplete factorization succeeds — the same
+//! `shift` strategy PETSc's `icc` uses. See DESIGN.md §Substitutions.
+
+use super::Preconditioner;
+use crate::la::Csr;
+use anyhow::{bail, Result};
+
+/// ICC(0) factor L (lower triangular, same pattern as tril(A)); apply solves
+/// L Lᵀ z = r.
+#[derive(Debug, Clone)]
+pub struct Icc0 {
+    /// Lower-triangular factor in CSR (rows sorted, diagonal last in row).
+    l: Csr,
+    diag_pos: Vec<usize>,
+}
+
+impl Icc0 {
+    pub fn new(a: &Csr) -> Result<Icc0> {
+        let sym = if a.asymmetry() > 1e-12 { a.symmetric_part() } else { a.clone() };
+        let mut shift = 0.0;
+        for attempt in 0..8 {
+            match Self::factor(&sym, shift) {
+                Ok(icc) => return Ok(icc),
+                Err(_) if attempt < 7 => {
+                    // escalate the Manteuffel shift
+                    let base = sym.diag().iter().fold(0.0f64, |m, d| m.max(d.abs()));
+                    shift = if shift == 0.0 { 1e-3 * base } else { shift * 4.0 };
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        unreachable!()
+    }
+
+    fn factor(a: &Csr, shift: f64) -> Result<Icc0> {
+        let n = a.nrows();
+        // Extract the lower triangle (including diagonal, shifted).
+        let mut trips = Vec::new();
+        for i in 0..n {
+            let (cols, vals) = a.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c < i {
+                    trips.push((i, c, v));
+                } else if c == i {
+                    trips.push((i, c, v + shift));
+                }
+            }
+        }
+        let mut l = Csr::from_triplets(n, n, &trips);
+        let mut diag_pos = vec![usize::MAX; n];
+        for i in 0..n {
+            for k in l.row_ptr[i]..l.row_ptr[i + 1] {
+                if l.col_idx[k] == i {
+                    diag_pos[i] = k;
+                }
+            }
+            if diag_pos[i] == usize::MAX {
+                bail!("ICC0: structurally zero diagonal at row {i}");
+            }
+        }
+        // Row-oriented incomplete Cholesky restricted to the pattern:
+        // for each row i: L[i,j] = (A[i,j] - Σ_k<j L[i,k] L[j,k]) / L[j,j],
+        // L[i,i] = sqrt(A[i,i] - Σ_k<i L[i,k]²).
+        for i in 0..n {
+            let (start, end) = (l.row_ptr[i], l.row_ptr[i + 1]);
+            for kk in start..end {
+                let j = l.col_idx[kk];
+                // dot of row i and row j over columns < j (pattern-restricted)
+                let mut s = l.vals[kk];
+                {
+                    let (mut p, mut q) = (start, l.row_ptr[j]);
+                    let (pend, qend) = (kk, diag_pos[j]);
+                    while p < pend && q < qend {
+                        let (ci, cj) = (l.col_idx[p], l.col_idx[q]);
+                        if ci == cj {
+                            s -= l.vals[p] * l.vals[q];
+                            p += 1;
+                            q += 1;
+                        } else if ci < cj {
+                            p += 1;
+                        } else {
+                            q += 1;
+                        }
+                    }
+                }
+                if j == i {
+                    if s <= 0.0 {
+                        bail!("ICC0: negative pivot at row {i} (s={s})");
+                    }
+                    l.vals[kk] = s.sqrt();
+                } else {
+                    let ljj = l.vals[diag_pos[j]];
+                    l.vals[kk] = s / ljj;
+                }
+            }
+        }
+        Ok(Icc0 { l, diag_pos })
+    }
+}
+
+impl Preconditioner for Icc0 {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        let n = r.len();
+        // Forward solve L y = r.
+        for i in 0..n {
+            let start = self.l.row_ptr[i];
+            let dp = self.diag_pos[i];
+            let mut s = r[i];
+            for k in start..dp {
+                s -= self.l.vals[k] * z[self.l.col_idx[k]];
+            }
+            z[i] = s / self.l.vals[dp];
+        }
+        // Backward solve Lᵀ z = y (column sweep on L).
+        for i in (0..n).rev() {
+            let dp = self.diag_pos[i];
+            z[i] /= self.l.vals[dp];
+            let start = self.l.row_ptr[i];
+            let zi = z[i];
+            for k in start..dp {
+                z[self.l.col_idx[k]] -= self.l.vals[k] * zi;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "icc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precond::testutil::{lap1d, nonsym};
+
+    #[test]
+    fn exact_for_spd_tridiagonal() {
+        // Tridiagonal SPD ⇒ no fill ⇒ IC(0) is the exact Cholesky factor.
+        let a = lap1d(24);
+        let p = Icc0::new(&a).unwrap();
+        let xtrue: Vec<f64> = (0..24).map(|i| (i as f64 * 0.3).sin()).collect();
+        let b = a.matvec(&xtrue);
+        let mut z = vec![0.0; 24];
+        p.apply(&b, &mut z);
+        for (u, v) in z.iter().zip(&xtrue) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn handles_nonsymmetric_input_via_symmetric_part() {
+        let a = nonsym(32);
+        let p = Icc0::new(&a).unwrap();
+        let r = vec![1.0; 32];
+        let mut z = vec![0.0; 32];
+        p.apply(&r, &mut z);
+        assert!(z.iter().all(|v| v.is_finite()));
+        assert!(crate::la::norm2(&z) > 0.0);
+    }
+
+    #[test]
+    fn symmetric_apply_is_symmetric_operator() {
+        // M⁻¹ = L⁻ᵀL⁻¹ is symmetric: ⟨M⁻¹u, v⟩ == ⟨u, M⁻¹v⟩.
+        let a = lap1d(16);
+        let p = Icc0::new(&a).unwrap();
+        let u: Vec<f64> = (0..16).map(|i| (i as f64).cos()).collect();
+        let v: Vec<f64> = (0..16).map(|i| (i as f64 * 0.5).sin()).collect();
+        let (mut mu, mut mv) = (vec![0.0; 16], vec![0.0; 16]);
+        p.apply(&u, &mut mu);
+        p.apply(&v, &mut mv);
+        let lhs = crate::la::dot(&mu, &v);
+        let rhs = crate::la::dot(&u, &mv);
+        assert!((lhs - rhs).abs() < 1e-10 * lhs.abs().max(1.0));
+    }
+}

@@ -1,0 +1,17 @@
+//! Identity preconditioner ("None" in the paper's tables).
+
+use super::Preconditioner;
+
+/// z = r.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Identity;
+
+impl Preconditioner for Identity {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        z.copy_from_slice(r);
+    }
+
+    fn name(&self) -> &'static str {
+        "none"
+    }
+}

@@ -1,0 +1,58 @@
+//! Diagonal (Jacobi) preconditioner.
+
+use super::Preconditioner;
+use crate::la::Csr;
+use anyhow::{bail, Result};
+
+/// z = D⁻¹ r with D = diag(A).
+#[derive(Debug, Clone)]
+pub struct Jacobi {
+    inv_diag: Vec<f64>,
+}
+
+impl Jacobi {
+    pub fn new(a: &Csr) -> Result<Jacobi> {
+        let d = a.diag();
+        let mut inv_diag = Vec::with_capacity(d.len());
+        for (i, &di) in d.iter().enumerate() {
+            if di == 0.0 {
+                bail!("Jacobi: zero diagonal at row {i}");
+            }
+            inv_diag.push(1.0 / di);
+        }
+        Ok(Jacobi { inv_diag })
+    }
+}
+
+impl Preconditioner for Jacobi {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        for i in 0..r.len() {
+            z[i] = r[i] * self.inv_diag[i];
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "jacobi"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precond::testutil::lap1d;
+
+    #[test]
+    fn divides_by_diagonal() {
+        let a = lap1d(4);
+        let p = Jacobi::new(&a).unwrap();
+        let mut z = vec![0.0; 4];
+        p.apply(&[2.0, 4.0, 6.0, 8.0], &mut z);
+        assert_eq!(z, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rejects_zero_diagonal() {
+        let a = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (0, 1, 1.0), (1, 0, 1.0)]);
+        assert!(Jacobi::new(&a).is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Artifact manifest: shapes, parameter ABI and file locations produced by
+//! `python/compile/aot.py` (`make artifacts`).
+
+use crate::util::json::Json;
+use crate::util::npy;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub grid: usize,
+    pub batch: usize,
+    pub width: usize,
+    pub modes: usize,
+    pub layers: usize,
+    pub lr: f64,
+    /// (name, shape) in ABI order.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub forward_file: String,
+    pub train_step_file: String,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text)?;
+        let cfg = j.get("config").context("manifest: no config")?;
+        let get = |k: &str| -> Result<usize> {
+            cfg.get(k).and_then(|v| v.as_usize()).with_context(|| format!("manifest: config.{k}"))
+        };
+        let params = j
+            .get("params")
+            .and_then(|p| p.as_arr())
+            .context("manifest: params")?
+            .iter()
+            .map(|p| {
+                let name = p.get("name").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default();
+                (name, shape)
+            })
+            .collect();
+        let arts = j.get("artifacts").context("manifest: artifacts")?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            grid: get("grid")?,
+            batch: get("batch")?,
+            width: get("width")?,
+            modes: get("modes")?,
+            layers: get("layers")?,
+            lr: j.get("lr").and_then(|v| v.as_f64()).unwrap_or(1e-3),
+            params,
+            forward_file: arts
+                .get("forward")
+                .and_then(|v| v.as_str())
+                .context("manifest: artifacts.forward")?
+                .to_string(),
+            train_step_file: arts
+                .get("train_step")
+                .and_then(|v| v.as_str())
+                .context("manifest: artifacts.train_step")?
+                .to_string(),
+        })
+    }
+
+    /// Default artifacts directory, overridable via `SKR_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SKR_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load the initial parameter tensors (f32) in ABI order.
+    pub fn load_params(&self) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(self.params.len());
+        for (name, shape) in &self.params {
+            let arr = npy::read(&self.dir.join("params").join(format!("{name}.npy")))
+                .with_context(|| format!("param {name}"))?;
+            anyhow::ensure!(&arr.shape == shape, "param {name}: shape {:?} != manifest {:?}", arr.shape, shape);
+            out.push(arr.as_f32());
+        }
+        Ok(out)
+    }
+
+    /// Total parameter count (for reporting).
+    pub fn num_weights(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.grid >= 8);
+        assert!(m.batch >= 1);
+        assert_eq!(m.params.first().map(|(n, _)| n.as_str()), Some("lift_w"));
+        let ps = m.load_params().unwrap();
+        assert_eq!(ps.len(), m.params.len());
+        assert!(m.num_weights() > 1000);
+    }
+}

@@ -1,0 +1,84 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO **text**
+//! (the id-safe interchange format — see DESIGN.md), compile once, execute
+//! many times.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client plus compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO module.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Human tag for error messages.
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; the artifact was lowered with
+    /// `return_tuple=True`, so the single output buffer is a tuple literal
+    /// decomposed into its elements.
+    pub fn call<L: std::borrow::Borrow<xla::Literal>>(&self, args: &[L]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<L>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching outputs of {}", self.name))?;
+        let parts = lit.decompose_tuple().context("decomposing output tuple")?;
+        Ok(parts)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let count: usize = dims.iter().product();
+    anyhow::ensure!(count == data.len(), "literal shape {:?} != data len {}", dims, data.len());
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims_i64)?)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract a flat f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,95 @@
+//! Typed FNO executors over the PJRT runtime: stateful Adam training
+//! (`train_step`) and inference (`predict`), with all optimizer state owned
+//! by rust and threaded through the HLO signature.
+
+use super::artifacts::Manifest;
+use super::client::{literal_f32, literal_scalar, to_vec_f32, Executable, Runtime};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A loaded FNO with training state.
+pub struct FnoRuntime {
+    pub manifest: Manifest,
+    forward: Executable,
+    train_step: Executable,
+    /// Current parameters (ABI order), then Adam m and v, as literals.
+    params: Vec<xla::Literal>,
+    m_state: Vec<xla::Literal>,
+    v_state: Vec<xla::Literal>,
+    step: xla::Literal,
+}
+
+impl FnoRuntime {
+    /// Load artifacts from `dir` and initialize training state.
+    pub fn load(dir: &Path) -> Result<FnoRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let rt = Runtime::cpu()?;
+        let forward = rt.load_hlo_text(&dir.join(&manifest.forward_file))?;
+        let train_step = rt.load_hlo_text(&dir.join(&manifest.train_step_file))?;
+        let raw = manifest.load_params()?;
+        let mut params = Vec::with_capacity(raw.len());
+        let mut m_state = Vec::with_capacity(raw.len());
+        let mut v_state = Vec::with_capacity(raw.len());
+        for (data, (name, shape)) in raw.iter().zip(&manifest.params) {
+            params.push(literal_f32(data, shape).with_context(|| format!("param {name}"))?);
+            let zeros = vec![0.0f32; data.len()];
+            m_state.push(literal_f32(&zeros, shape)?);
+            v_state.push(literal_f32(&zeros, shape)?);
+        }
+        Ok(FnoRuntime {
+            manifest,
+            forward,
+            train_step,
+            params,
+            m_state,
+            v_state,
+            step: literal_scalar(0.0),
+        })
+    }
+
+    /// Input tensor element count per batch ([B, S, S, 1]).
+    pub fn batch_elems(&self) -> usize {
+        self.manifest.batch * self.manifest.grid * self.manifest.grid
+    }
+
+    /// One Adam step on a batch (x, y each `[B, S, S, 1]` flattened);
+    /// returns the loss.
+    pub fn train_step(&mut self, x: &[f32], y: &[f32]) -> Result<f32> {
+        let (b, s) = (self.manifest.batch, self.manifest.grid);
+        let x = literal_f32(x, &[b, s, s, 1])?;
+        let y = literal_f32(y, &[b, s, s, 1])?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * self.params.len() + 3);
+        args.extend(self.params.iter());
+        args.extend(self.m_state.iter());
+        args.extend(self.v_state.iter());
+        args.push(&self.step);
+        args.push(&x);
+        args.push(&y);
+        let outs = self.train_step.call(&args)?;
+        let n = self.params.len();
+        anyhow::ensure!(outs.len() == 3 * n + 2, "train_step returned {} outputs", outs.len());
+        let mut it = outs.into_iter();
+        self.params = (&mut it).take(n).collect();
+        self.m_state = (&mut it).take(n).collect();
+        self.v_state = (&mut it).take(n).collect();
+        self.step = it.next().unwrap();
+        let loss = it.next().unwrap();
+        Ok(loss.get_first_element::<f32>()?)
+    }
+
+    /// Forward pass on a batch; returns the flattened prediction.
+    pub fn predict(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let (b, s) = (self.manifest.batch, self.manifest.grid);
+        let x = literal_f32(x, &[b, s, s, 1])?;
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&x);
+        let outs = self.forward.call(&args)?;
+        anyhow::ensure!(outs.len() == 1, "forward returned {} outputs", outs.len());
+        to_vec_f32(&outs[0])
+    }
+
+    /// Current step counter.
+    pub fn steps_done(&self) -> Result<f32> {
+        Ok(self.step.get_first_element::<f32>()?)
+    }
+}

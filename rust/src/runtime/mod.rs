@@ -1,0 +1,11 @@
+//! PJRT runtime — loads the AOT-compiled HLO artifacts (`make artifacts`)
+//! and executes them on the CPU PJRT client. Python never runs here; the
+//! rust binary is self-contained once `artifacts/` exists.
+
+pub mod artifacts;
+pub mod client;
+pub mod executor;
+
+pub use artifacts::Manifest;
+pub use client::Runtime;
+pub use executor::FnoRuntime;

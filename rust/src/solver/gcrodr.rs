@@ -1,0 +1,701 @@
+//! GCRO-DR — Generalized Conjugate Residual with inner Orthogonalization and
+//! Deflated Restarting (Parks et al. 2006; the paper's Appendix B.2), the
+//! engine of SKR.
+//!
+//! Between consecutive linear systems the solver *recycles* an approximate
+//! invariant subspace `Ỹ_k` (harmonic Ritz vectors of the preconditioned
+//! operator). For system i+1 it re-orthonormalizes `A⁽ⁱ⁺¹⁾Ỹ_k` into
+//! `C_k` (with `A U_k = C_k`, `C_kᴴC_k = I`) and runs deflated Arnoldi with
+//! the projected operator `(I − C_kC_kᴴ) A`. Right preconditioning is used
+//! throughout; the recycled vectors live in the preconditioned variable
+//! space (see DESIGN.md).
+
+use crate::la::{axpy, dot, norm2, Csr, Mat};
+use crate::precond::Preconditioner;
+use crate::solver::harmonic::{harmonic_ritz_cycle, harmonic_ritz_initial};
+use crate::solver::stats::{SolveStats, SolverConfig, StopReason};
+use crate::util::timer::Timer;
+
+/// Recycle state carried across the systems of a sequence.
+#[derive(Default, Clone)]
+pub struct Recycler {
+    /// `Ỹ_k` — the subspace to recycle into the next solve (n × k columns).
+    pub ytilde: Option<Vec<Vec<f64>>>,
+    /// `(U, C)` pair valid for the operator identified by `fingerprint`
+    /// (`A M⁻¹ U = C`, `CᴴC = I`). When the next system's operator matches,
+    /// the k reseed operator-applies are skipped entirely (Parks et al.
+    /// §3: re-orthonormalization is only needed when the matrix changes —
+    /// the common case for families like the thermal problem, where only
+    /// the right-hand side varies).
+    uc: Option<(Vec<Vec<f64>>, Vec<Vec<f64>>)>,
+    fingerprint: u64,
+}
+
+impl Recycler {
+    pub fn new() -> Recycler {
+        Recycler::default()
+    }
+
+    /// Dimension of the currently held space.
+    pub fn dim(&self) -> usize {
+        self.ytilde.as_ref().map_or(0, |y| y.len())
+    }
+}
+
+/// Cheap order-dependent checksum of the operator (matrix values + structure
+/// + preconditioner identity). Collisions are astronomically unlikely and
+/// would only cost extra iterations, never a wrong answer (the final
+/// residual is always checked against the true operator).
+fn operator_fingerprint(a: &Csr, m_inv: &dyn Preconditioner) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    };
+    mix(a.nrows() as u64);
+    mix(a.nnz() as u64);
+    for &v in a.values() {
+        mix(v.to_bits());
+    }
+    for &c in a.col_indices() {
+        mix(c as u64);
+    }
+    // The preconditioner is a deterministic function of (A, kind), so the
+    // kind tag completes the identity.
+    for b in m_inv.name().bytes() {
+        mix(b as u64);
+    }
+    h
+}
+
+/// Apply the preconditioned operator: out = A M⁻¹ v (z is scratch).
+#[inline]
+fn apply_op(a: &Csr, m_inv: &dyn Preconditioner, v: &[f64], z: &mut [f64], out: &mut [f64]) {
+    m_inv.apply(v, z);
+    a.matvec_into(z, out);
+}
+
+/// Orthonormalize the image `A·M⁻¹·Y` into C (n×k) and update U so that
+/// `A M⁻¹ U = C`, `CᵀC = I`. Columns whose R-diagonal collapses are dropped
+/// (rank truncation). Returns (U, C); `iters` counts the k operator applies.
+#[allow(clippy::type_complexity)]
+fn reseed(
+    a: &Csr,
+    m_inv: &dyn Preconditioner,
+    y: &[Vec<f64>],
+    iters: &mut usize,
+) -> Option<(Vec<Vec<f64>>, Vec<Vec<f64>>)> {
+    let n = a.nrows();
+    let k = y.len();
+    if k == 0 {
+        return None;
+    }
+    let mut ay = Mat::zeros(n, k);
+    let mut z = vec![0.0; n];
+    let mut w = vec![0.0; n];
+    for (j, yj) in y.iter().enumerate() {
+        apply_op(a, m_inv, yj, &mut z, &mut w);
+        *iters += 1;
+        ay.set_col(j, &w);
+    }
+    let (q, r) = ay.qr_thin();
+    // Detect rank collapse.
+    let rmax = (0..k).map(|i| r[(i, i)].abs()).fold(0.0f64, f64::max);
+    let keep: Vec<usize> = (0..k).filter(|&i| r[(i, i)].abs() > 1e-12 * rmax.max(1e-300)).collect();
+    if keep.is_empty() {
+        return None;
+    }
+    // U = Y R⁻¹ (only for kept columns — recompute a clean QR on the kept set
+    // if truncation happened, for simplicity and robustness).
+    if keep.len() < k {
+        let ykeep: Vec<Vec<f64>> = keep.iter().map(|&i| y[i].clone()).collect();
+        return reseed(a, m_inv, &ykeep, iters);
+    }
+    // Solve U R = Y column-wise: U[:,j] = (Y[:,0..=j] combo). Use back-substitution
+    // on Rᵀ? Direct: R is k×k upper triangular, U = Y R⁻¹.
+    let rinv = invert_upper(&r)?;
+    let mut u_cols = vec![vec![0.0; n]; k];
+    for j in 0..k {
+        for (i, yi) in y.iter().enumerate().take(j + 1) {
+            let c = rinv[(i, j)];
+            if c != 0.0 {
+                axpy(c, yi, &mut u_cols[j]);
+            }
+        }
+    }
+    let c_cols: Vec<Vec<f64>> = (0..k).map(|j| q.col(j).to_vec()).collect();
+    Some((u_cols, c_cols))
+}
+
+/// Invert a small upper-triangular matrix; None if numerically singular.
+fn invert_upper(r: &Mat) -> Option<Mat> {
+    let k = r.ncols;
+    let mut inv = Mat::zeros(k, k);
+    for j in 0..k {
+        let mut e = vec![0.0; k];
+        e[j] = 1.0;
+        let x = r.solve_upper(&e).ok()?;
+        inv.set_col(j, &x);
+    }
+    Some(inv)
+}
+
+/// Solve A x = b with GCRO-DR, recycling through `rec`. `x` carries the
+/// initial guess in and the solution out.
+pub fn gcrodr(
+    a: &Csr,
+    b: &[f64],
+    x: &mut [f64],
+    m_inv: &dyn Preconditioner,
+    cfg: &SolverConfig,
+    rec: &mut Recycler,
+) -> SolveStats {
+    let timer = Timer::start();
+    let n = b.len();
+    let m = cfg.m.max(2);
+    let k_target = cfg.k.clamp(1, m - 1);
+    let bnorm = norm2(b).max(1e-300);
+    let mut trace: Vec<(usize, f64)> = Vec::new();
+    let mut iters = 0usize;
+
+    let mut z = vec![0.0; n]; // scratch for M⁻¹
+    let mut w = vec![0.0; n];
+
+    // r = b − A x
+    let mut r = b.to_vec();
+    a.matvec_into(x, &mut w);
+    axpy(-1.0, &w, &mut r);
+    let mut rel = norm2(&r) / bnorm;
+    if cfg.record_trace {
+        trace.push((0, rel));
+    }
+    if rel < cfg.tol {
+        return SolveStats { iters, seconds: timer.secs(), rel_residual: rel, stop: StopReason::Converged, trace };
+    }
+
+    // (U, C) for this system.
+    let mut uc: Option<(Vec<Vec<f64>>, Vec<Vec<f64>>)> = None;
+    let fp = operator_fingerprint(a, m_inv);
+
+    // A recycle space from a different-sized system is meaningless — drop it
+    // rather than panic (callers may legitimately mix problem sizes).
+    if rec.ytilde.as_ref().is_some_and(|y| y.first().is_some_and(|c| c.len() != n)) {
+        rec.ytilde = None;
+        rec.uc = None;
+    }
+
+    if rec.fingerprint == fp && rec.uc.is_some() {
+        // Operator unchanged since the previous solve: A M⁻¹ U = C still
+        // holds, so skip the k reseed applies and project immediately.
+        let (u, c) = rec.uc.take().unwrap();
+        let k = c.len();
+        let mut du = vec![0.0; n];
+        for j in 0..k {
+            let cj = dot(&c[j], &r);
+            axpy(cj, &u[j], &mut du);
+            axpy(-cj, &c[j], &mut r);
+        }
+        m_inv.apply(&du, &mut z);
+        axpy(1.0, &z, x);
+        uc = Some((u, c));
+        rel = norm2(&r) / bnorm;
+        rec.ytilde = None;
+    } else if let Some(y) = rec.ytilde.take() {
+        if let Some((u, c)) = reseed(a, m_inv, &y, &mut iters) {
+            // x ← x + M⁻¹ (U Cᵀ r);   r ← r − C Cᵀ r
+            let k = c.len();
+            let mut du = vec![0.0; n];
+            for j in 0..k {
+                let cj = dot(&c[j], &r);
+                axpy(cj, &u[j], &mut du);
+                axpy(-cj, &c[j], &mut r);
+            }
+            m_inv.apply(&du, &mut z);
+            axpy(1.0, &z, x);
+            uc = Some((u, c));
+            rel = norm2(&r) / bnorm;
+        }
+    }
+
+    if uc.is_none() {
+        // First system of the sequence: one full GMRES(m) cycle to harvest
+        // harmonic Ritz vectors (Alg. 2, lines 9–18).
+        let beta = norm2(&r);
+        let mut basis: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
+        basis.push(r.iter().map(|v| v / beta).collect());
+        let mut h_cols: Vec<Vec<f64>> = Vec::new(); // column j holds H[0..=j+1, j]
+        let mut j_done = 0;
+        // Incremental Givens QR of H̄ for a per-step residual estimate
+        // (exactly the GMRES mechanism) — lets the cycle stop as soon as the
+        // tolerance is met instead of overshooting to the restart boundary.
+        let mut cs_r = vec![0.0; m];
+        let mut sn_r = vec![0.0; m];
+        let mut grot = vec![0.0; m + 1];
+        grot[0] = beta;
+        for j in 0..m {
+            apply_op(a, m_inv, &basis[j], &mut z, &mut w);
+            iters += 1;
+            let mut coeffs = crate::la::ortho::cgs2_orthogonalize(&mut w, &basis);
+            let hnext = crate::la::ortho::normalize(&mut w);
+            coeffs.push(hnext);
+            // Rotate the new column and extend the QR.
+            let mut col = coeffs.clone();
+            for i in 0..j {
+                let (c, s) = (cs_r[i], sn_r[i]);
+                let (t0, t1) = (col[i], col[i + 1]);
+                col[i] = c * t0 + s * t1;
+                col[i + 1] = -s * t0 + c * t1;
+            }
+            let rho = col[j].hypot(col[j + 1]);
+            let (c, s) = if rho == 0.0 { (1.0, 0.0) } else { (col[j] / rho, col[j + 1] / rho) };
+            cs_r[j] = c;
+            sn_r[j] = s;
+            let (g0, g1) = (grot[j], grot[j + 1]);
+            grot[j] = c * g0 + s * g1;
+            grot[j + 1] = -s * g0 + c * g1;
+            h_cols.push(coeffs);
+            j_done = j + 1;
+            let rel_est = grot[j + 1].abs() / bnorm;
+            if hnext < 1e-14 * bnorm || iters >= cfg.max_iters || rel_est < cfg.tol {
+                if hnext >= 1e-14 * bnorm {
+                    basis.push(w.clone());
+                }
+                break;
+            }
+            basis.push(w.clone());
+        }
+        // LS solve: min ‖βe₁ − H̄ y‖ over the j_done columns.
+        let mut h_bar = Mat::zeros(j_done + 1, j_done);
+        for (j, col) in h_cols.iter().enumerate() {
+            for (i, &v) in col.iter().enumerate().take(j_done + 1) {
+                if i <= j + 1 {
+                    h_bar[(i, j)] = v;
+                }
+            }
+        }
+        let mut rhs = vec![0.0; j_done + 1];
+        rhs[0] = beta;
+        if let Ok(y) = h_bar.lstsq(&rhs) {
+            let mut du = vec![0.0; n];
+            for (l, yl) in y.iter().enumerate() {
+                axpy(*yl, &basis[l], &mut du);
+            }
+            m_inv.apply(&du, &mut z);
+            axpy(1.0, &z, x);
+            // r = V_{m+1} (βe₁ − H̄ y)
+            let hy = h_bar.matvec(&y);
+            let mut coef = rhs.clone();
+            for i in 0..coef.len() {
+                coef[i] -= hy[i];
+            }
+            r.fill(0.0);
+            for (l, cl) in coef.iter().enumerate().take(basis.len()) {
+                axpy(*cl, &basis[l], &mut r);
+            }
+            rel = norm2(&r) / bnorm;
+        }
+        if cfg.record_trace {
+            trace.push((iters, rel));
+        }
+        // Harvest harmonic Ritz vectors if the cycle was long enough and the
+        // Arnoldi basis is complete (no breakdown: V_{j_done+1} exists).
+        // Harvest as many harmonic Ritz vectors as the cycle length allows
+        // (k_target when the cycle ran long enough, fewer on early exit).
+        let k_avail = k_target.min(j_done.saturating_sub(1));
+        if k_avail >= 1 && basis.len() == j_done + 1 {
+            if let Ok(p) = harmonic_ritz_initial(&h_bar, k_avail) {
+                let kk = p.ncols;
+                // Ỹ = V_m P
+                let mut y_cols = vec![vec![0.0; n]; kk];
+                for j in 0..kk {
+                    for l in 0..j_done {
+                        axpy(p[(l, j)], &basis[l], &mut y_cols[j]);
+                    }
+                }
+                // C = V_{m+1} Q, U = Ỹ R⁻¹ with [Q,R] = qr(H̄ P).
+                let hp = h_bar.matmul(&p);
+                let (q, rr) = hp.qr_thin();
+                if let Some(rinv) = invert_upper(&rr) {
+                    let mut u_cols = vec![vec![0.0; n]; kk];
+                    let mut c_cols = vec![vec![0.0; n]; kk];
+                    for j in 0..kk {
+                        for (l, vl) in basis.iter().enumerate() {
+                            axpy(q[(l, j)], vl, &mut c_cols[j]);
+                        }
+                        for i in 0..kk {
+                            let c = rinv[(i, j)];
+                            if c != 0.0 {
+                                // y_cols and u_cols are distinct allocations:
+                                // borrow directly, no per-column clone.
+                                axpy(c, &y_cols[i], &mut u_cols[j]);
+                            }
+                        }
+                    }
+                    uc = Some((u_cols, c_cols));
+                }
+            }
+        }
+    }
+
+    // Deflated restarting cycles (Alg. 2, lines 19–33).
+    while rel >= cfg.tol && iters < cfg.max_iters {
+        let Some((u, c)) = uc.as_ref() else {
+            // No recycle space (degenerate first cycle): fall back to GMRES.
+            let mut sub = cfg.clone();
+            sub.max_iters = cfg.max_iters - iters;
+            let stats = crate::solver::gmres::gmres(a, b, x, m_inv, &sub);
+            return SolveStats {
+                iters: iters + stats.iters,
+                seconds: timer.secs(),
+                rel_residual: stats.rel_residual,
+                stop: stats.stop,
+                trace,
+            };
+        };
+        let k = c.len();
+        let s = m - k; // inner Arnoldi steps this cycle
+
+        // D from unit-norm scaling of U's columns: Û = U D, A Û = C D.
+        let dvals: Vec<f64> = u.iter().map(|uj| {
+            let nrm = norm2(uj);
+            if nrm > 1e-300 { 1.0 / nrm } else { 1.0 }
+        }).collect();
+
+        // Arnoldi on (I − CCᵀ) A_op.
+        let rn = norm2(&r);
+        let mut basis: Vec<Vec<f64>> = Vec::with_capacity(s + 1);
+        {
+            // v₁ = r/‖r‖, re-orthogonalized against C for numerical safety.
+            let mut v1: Vec<f64> = r.iter().map(|v| v / rn).collect();
+            for cj in c {
+                let h = dot(cj, &v1);
+                axpy(-h, cj, &mut v1);
+            }
+            crate::la::ortho::normalize(&mut v1);
+            basis.push(v1);
+        }
+        let mut bmat = Mat::zeros(k, s); // B = Cᵀ A V_s
+        let mut h_cols: Vec<Vec<f64>> = Vec::new();
+        let mut s_done = 0;
+        // Per-step residual estimate via incremental Givens QR of the
+        // Hessenberg block of Ḡ. Because Ŵ = [C V] has orthonormal columns
+        // and r ∈ range(Ŵ) at cycle start, the least-squares residual after
+        // j steps is |grot[j+1]| — the arrowhead rows (D, B) are absorbed
+        // exactly by the triangular solve and contribute nothing.
+        let mut cs_r = vec![0.0; s];
+        let mut sn_r = vec![0.0; s];
+        let mut grot = vec![0.0; s + 1];
+        grot[0] = dot(&basis[0], &r);
+        for j in 0..s {
+            apply_op(a, m_inv, &basis[j], &mut z, &mut w);
+            iters += 1;
+            // Project out C, recording B.
+            for (i, ci) in c.iter().enumerate() {
+                let h = dot(ci, &w);
+                bmat[(i, j)] = h;
+                axpy(-h, ci, &mut w);
+            }
+            let mut coeffs = crate::la::ortho::cgs2_orthogonalize(&mut w, &basis);
+            let hnext = crate::la::ortho::normalize(&mut w);
+            coeffs.push(hnext);
+            // Extend the Givens QR with the rotated Hessenberg column.
+            let mut col = coeffs.clone();
+            for i in 0..j {
+                let (cg, sg) = (cs_r[i], sn_r[i]);
+                let (t0, t1) = (col[i], col[i + 1]);
+                col[i] = cg * t0 + sg * t1;
+                col[i + 1] = -sg * t0 + cg * t1;
+            }
+            let rho = col[j].hypot(col[j + 1]);
+            let (cg, sg) = if rho == 0.0 { (1.0, 0.0) } else { (col[j] / rho, col[j + 1] / rho) };
+            cs_r[j] = cg;
+            sn_r[j] = sg;
+            let (g0, g1) = (grot[j], grot[j + 1]);
+            grot[j] = cg * g0 + sg * g1;
+            grot[j + 1] = -sg * g0 + cg * g1;
+            h_cols.push(coeffs);
+            s_done = j + 1;
+            let rel_est = grot[j + 1].abs() / bnorm;
+            if hnext < 1e-14 * bnorm || iters >= cfg.max_iters || rel_est < cfg.tol {
+                if hnext >= 1e-14 * bnorm {
+                    basis.push(w.clone());
+                }
+                break;
+            }
+            basis.push(w.clone());
+        }
+        if s_done == 0 {
+            break;
+        }
+        let mdim = k + s_done;
+
+        // Ḡ = [D B; 0 H̄]  ((mdim+1) × mdim).
+        let mut g_bar = Mat::zeros(mdim + 1, mdim);
+        for (i, &d) in dvals.iter().enumerate() {
+            g_bar[(i, i)] = d;
+        }
+        for j in 0..s_done {
+            for i in 0..k {
+                g_bar[(i, k + j)] = bmat[(i, j)];
+            }
+            for (i, &v) in h_cols[j].iter().enumerate() {
+                g_bar[(k + i, k + j)] = v;
+            }
+        }
+
+        // Ŵᵀ r (W = [C V_{s+1}]).
+        let mut rhs = vec![0.0; mdim + 1];
+        for (i, ci) in c.iter().enumerate() {
+            rhs[i] = dot(ci, &r);
+        }
+        for (l, vl) in basis.iter().enumerate() {
+            rhs[k + l] = dot(vl, &r);
+        }
+
+        let Ok(y) = g_bar.lstsq(&rhs) else { break };
+
+        // x ← x + M⁻¹ (V̂ y) with V̂ = [Û V_s].
+        let mut du = vec![0.0; n];
+        for j in 0..k {
+            let coef = y[j] * dvals[j];
+            if coef != 0.0 {
+                axpy(coef, &u[j], &mut du);
+            }
+        }
+        for j in 0..s_done {
+            axpy(y[k + j], &basis[j], &mut du);
+        }
+        m_inv.apply(&du, &mut z);
+        axpy(1.0, &z, x);
+
+        // r ← r − Ŵ (Ḡ y).
+        let gy = g_bar.matvec(&y);
+        for (i, ci) in c.iter().enumerate() {
+            axpy(-gy[i], ci, &mut r);
+        }
+        for (l, vl) in basis.iter().enumerate() {
+            axpy(-gy[k + l], vl, &mut r);
+        }
+        rel = norm2(&r) / bnorm;
+        if cfg.record_trace {
+            trace.push((iters, rel));
+        }
+
+        // Update the recycle space from this cycle's harmonic Ritz problem.
+        // ŴᵀV̂: Ĉᵀ blocks computed from available quantities.
+        let mut whv = Mat::zeros(mdim + 1, mdim);
+        // CᵀÛ (k×k) and V_{s+1}ᵀÛ ((s_done+1)×k).
+        for j in 0..k {
+            let uhat: Vec<f64> = u[j].iter().map(|v| v * dvals[j]).collect();
+            for (i, ci) in c.iter().enumerate() {
+                whv[(i, j)] = dot(ci, &uhat);
+            }
+            for (l, vl) in basis.iter().enumerate() {
+                whv[(k + l, j)] = dot(vl, &uhat);
+            }
+        }
+        // CᵀV_s = 0 (V ⊥ C), V_{s+1}ᵀV_s = [I; 0].
+        for j in 0..s_done {
+            whv[(k + j, k + j)] = 1.0;
+        }
+        if let Ok(p) = harmonic_ritz_cycle(&g_bar, &whv, k_target) {
+            let kk = p.ncols;
+            if kk >= 1 {
+                // Ỹ = V̂ P.
+                let mut y_cols = vec![vec![0.0; n]; kk];
+                for j in 0..kk {
+                    for i in 0..k {
+                        let coef = p[(i, j)] * dvals[i];
+                        if coef != 0.0 {
+                            axpy(coef, &u[i], &mut y_cols[j]);
+                        }
+                    }
+                    for l in 0..s_done {
+                        axpy(p[(k + l, j)], &basis[l], &mut y_cols[j]);
+                    }
+                }
+                // [Q,R] = qr(Ḡ P); C' = Ŵ Q; U' = Ỹ R⁻¹.
+                let gp = g_bar.matmul(&p);
+                let (q, rr) = gp.qr_thin();
+                if let Some(rinv) = invert_upper(&rr) {
+                    let mut c_new = vec![vec![0.0; n]; kk];
+                    let mut u_new = vec![vec![0.0; n]; kk];
+                    for j in 0..kk {
+                        for (i, ci) in c.iter().enumerate() {
+                            axpy(q[(i, j)], ci, &mut c_new[j]);
+                        }
+                        for (l, vl) in basis.iter().enumerate() {
+                            axpy(q[(k + l, j)], vl, &mut c_new[j]);
+                        }
+                        for i in 0..kk {
+                            let coef = rinv[(i, j)];
+                            if coef != 0.0 {
+                                axpy(coef, &y_cols[i], &mut u_new[j]);
+                            }
+                        }
+                    }
+                    uc = Some((u_new, c_new));
+                }
+            }
+        }
+    }
+
+    // Keep Ỹ = U for the next system (Alg. 2, line 34), plus the exact
+    // (U, C) pair so a next solve with the *same* operator can skip reseed.
+    if let Some((u, c)) = uc {
+        let mut y: Vec<Vec<f64>> = u.clone();
+        for col in &mut y {
+            crate::la::ortho::normalize(col);
+        }
+        rec.ytilde = Some(y);
+        rec.uc = Some((u, c));
+        rec.fingerprint = fp;
+    }
+
+    // Honest final residual.
+    let mut rtrue = b.to_vec();
+    a.matvec_into(x, &mut w);
+    axpy(-1.0, &w, &mut rtrue);
+    let final_rel = norm2(&rtrue) / bnorm;
+    let stop = if final_rel < cfg.tol * 1.5 {
+        StopReason::Converged
+    } else if iters >= cfg.max_iters {
+        StopReason::MaxIters
+    } else {
+        StopReason::Breakdown
+    };
+    SolveStats { iters, seconds: timer.secs(), rel_residual: final_rel, stop, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precond::testutil::{lap1d, nonsym};
+    use crate::precond::{Identity, PrecondKind};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn single_system_matches_gmres_solution() {
+        let a = nonsym(150);
+        let mut rng = Rng::new(31);
+        let xtrue = rng.normals(150);
+        let b = a.matvec(&xtrue);
+        let cfg = SolverConfig::default().with_tol(1e-10);
+        let mut x = vec![0.0; 150];
+        let mut rec = Recycler::new();
+        let stats = gcrodr(&a, &b, &mut x, &Identity, &cfg, &mut rec);
+        assert!(stats.converged(), "{stats:?}");
+        for (u, v) in x.iter().zip(&xtrue) {
+            assert!((u - v).abs() < 1e-6, "{u} vs {v}");
+        }
+        assert!(rec.dim() > 0, "recycle space should be harvested");
+    }
+
+    #[test]
+    fn recycling_speeds_up_similar_sequence() {
+        // A sequence of slightly perturbed SPD systems: GCRO-DR with warm
+        // recycle must use clearly fewer total iterations than solving each
+        // from scratch (k=0 ⇒ GMRES-equivalent baseline).
+        let n = 300;
+        let base = lap1d(n);
+        let cfg = SolverConfig::default().with_tol(1e-8).with_m(30).with_k(8);
+        let mut rng = Rng::new(17);
+
+        let systems: Vec<(Csr, Vec<f64>)> = (0..6)
+            .map(|i| {
+                let eps = 0.01 * (i as f64);
+                let a = base.add_diag(eps);
+                let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                (a, b)
+            })
+            .collect();
+
+        let mut rec = Recycler::new();
+        let mut recycled_iters = 0;
+        for (a, b) in &systems {
+            let mut x = vec![0.0; *&n];
+            let s = gcrodr(a, b, &mut x, &Identity, &cfg, &mut rec);
+            assert!(s.converged(), "{s:?}");
+            recycled_iters += s.iters;
+        }
+
+        let mut fresh_iters = 0;
+        for (a, b) in &systems {
+            let mut x = vec![0.0; n];
+            let s = crate::solver::gmres::gmres(a, b, &mut x, &Identity, &cfg);
+            assert!(s.converged());
+            fresh_iters += s.iters;
+        }
+        assert!(
+            (recycled_iters as f64) < 0.8 * fresh_iters as f64,
+            "recycled {recycled_iters} vs fresh {fresh_iters}"
+        );
+    }
+
+    #[test]
+    fn converges_with_all_preconditioners() {
+        let a = nonsym(120);
+        let mut rng = Rng::new(3);
+        let xtrue = rng.normals(120);
+        let b = a.matvec(&xtrue);
+        for kind in PrecondKind::ALL {
+            let p = kind.build(&a).unwrap();
+            let mut x = vec![0.0; 120];
+            let mut rec = Recycler::new();
+            let cfg = SolverConfig::default().with_tol(1e-9).with_m(25).with_k(6);
+            let s = gcrodr(&a, &b, &mut x, p.as_ref(), &cfg, &mut rec);
+            assert!(s.converged(), "{kind:?}: {s:?}");
+            assert!(s.rel_residual < 1e-8, "{kind:?}: {}", s.rel_residual);
+        }
+    }
+
+    #[test]
+    fn zero_rhs_is_trivial() {
+        let a = lap1d(20);
+        let mut x = vec![0.0; 20];
+        let mut rec = Recycler::new();
+        let s = gcrodr(&a, &[0.0; 20], &mut x, &Identity, &SolverConfig::default(), &mut rec);
+        assert_eq!(s.iters, 0);
+        assert!(s.converged());
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let a = lap1d(400);
+        let b = vec![1.0; 400];
+        let mut x = vec![0.0; 400];
+        let mut rec = Recycler::new();
+        let cfg = SolverConfig::default().with_tol(1e-14).with_max_iters(20).with_m(10).with_k(3);
+        let s = gcrodr(&a, &b, &mut x, &Identity, &cfg, &mut rec);
+        assert!(s.iters <= 25, "{}", s.iters);
+    }
+
+    #[test]
+    fn recycle_space_carries_across_matching_dims() {
+        let a = nonsym(100);
+        let b = vec![1.0; 100];
+        let cfg = SolverConfig::default().with_tol(1e-9).with_m(20).with_k(5);
+        let mut rec = Recycler::new();
+        let mut x = vec![0.0; 100];
+        gcrodr(&a, &b, &mut x, &Identity, &cfg, &mut rec);
+        let k1 = rec.dim();
+        assert!(k1 >= 1 && k1 <= 5);
+        // Second solve must succeed from the warm space.
+        let mut x2 = vec![0.0; 100];
+        let s2 = gcrodr(&a, &b, &mut x2, &Identity, &cfg, &mut rec);
+        assert!(s2.converged());
+        // Identical system solved twice: the warm solve's Krylov work must not
+        // exceed the cold solve's by more than the k reseed operator applies
+        // (which `iters` counts honestly).
+        let mut rec_fresh = Recycler::new();
+        let mut x3 = vec![0.0; 100];
+        let s3 = gcrodr(&a, &b, &mut x3, &Identity, &cfg, &mut rec_fresh);
+        assert!(
+            s2.iters <= s3.iters + cfg.k,
+            "warm {} vs cold {} (+k={})",
+            s2.iters,
+            s3.iters,
+            cfg.k
+        );
+    }
+}

@@ -1,0 +1,178 @@
+//! Harmonic-Ritz eigenproblems for GCRO-DR (Parks et al., Alg. 2 lines 14
+//! and 29). Both problems are small (≈ m×m) and real; eigenpairs may be
+//! complex, so selected eigenvectors are *realified* — complex-conjugate
+//! pairs contribute their real and imaginary parts as two real basis
+//! vectors, which span the same invariant subspace.
+
+use crate::la::eig::{eig, eig_generalized, smallest_k_indices, Eig};
+use crate::la::{Mat, ZMat};
+use anyhow::Result;
+
+/// Realify up to `k` eigenvectors with smallest-magnitude eigenvalues into a
+/// real `n × k'` matrix (k' ≤ k; conjugate pairs consume two columns).
+fn realify_smallest(e: &Eig, k: usize) -> Mat {
+    let n = e.vectors.nrows;
+    let order = smallest_k_indices(&e.values, e.values.len());
+    let mut used = vec![false; e.values.len()];
+    let mut cols: Vec<Vec<f64>> = Vec::with_capacity(k);
+    for &i in &order {
+        if cols.len() >= k || used[i] {
+            continue;
+        }
+        used[i] = true;
+        let lam = e.values[i];
+        let scale_tol = 1e-10 * (1.0 + lam.abs());
+        if lam.im.abs() <= scale_tol {
+            // Real eigenvalue: take the real part of the vector.
+            let mut v: Vec<f64> = (0..n).map(|r| e.vectors[(r, i)].re).collect();
+            let nrm = crate::la::norm2(&v);
+            if nrm > 1e-300 {
+                crate::la::scal(1.0 / nrm, &mut v);
+                cols.push(v);
+            }
+        } else {
+            // Complex pair: real + imaginary parts; mark the conjugate used.
+            for &j in &order {
+                if !used[j] && (e.values[j].conj() - lam).abs() <= 1e-8 * (1.0 + lam.abs()) {
+                    used[j] = true;
+                    break;
+                }
+            }
+            let mut re: Vec<f64> = (0..n).map(|r| e.vectors[(r, i)].re).collect();
+            let mut im: Vec<f64> = (0..n).map(|r| e.vectors[(r, i)].im).collect();
+            let nr = crate::la::norm2(&re);
+            if nr > 1e-300 {
+                crate::la::scal(1.0 / nr, &mut re);
+                cols.push(re);
+            }
+            if cols.len() < k {
+                let ni = crate::la::norm2(&im);
+                if ni > 1e-300 {
+                    crate::la::scal(1.0 / ni, &mut im);
+                    cols.push(im);
+                }
+            }
+        }
+    }
+    let mut p = Mat::zeros(n, cols.len());
+    for (j, c) in cols.iter().enumerate() {
+        p.set_col(j, c);
+    }
+    p
+}
+
+/// Initial-cycle harmonic Ritz (Alg. 2 line 14): eigenvectors of
+/// `H_m + h²_{m+1,m} · H_m^{-H} e_m e_mᵀ` with smallest |θ|.
+/// `h_bar` is the (j+1)×j Hessenberg from the GMRES cycle. Returns a j×k'
+/// real matrix P.
+pub fn harmonic_ritz_initial(h_bar: &Mat, k: usize) -> Result<Mat> {
+    let j = h_bar.ncols;
+    assert_eq!(h_bar.nrows, j + 1);
+    // Square part H_m.
+    let mut h = Mat::zeros(j, j);
+    for c in 0..j {
+        for r in 0..j {
+            h[(r, c)] = h_bar[(r, c)];
+        }
+    }
+    let h2 = h_bar[(j, j - 1)] * h_bar[(j, j - 1)];
+    // f = H^{-H} e_m  ⇔  Hᵀ f = e_m (real arithmetic).
+    let f = h.transpose().solve(&{
+        let mut e = vec![0.0; j];
+        e[j - 1] = 1.0;
+        e
+    })?;
+    let mut m = h;
+    for r in 0..j {
+        m[(r, j - 1)] += h2 * f[r];
+    }
+    let e = eig(&ZMat::from_real(&m))?;
+    Ok(realify_smallest(&e, k.min(j.saturating_sub(1)).max(1)))
+}
+
+/// Recycling-cycle harmonic Ritz (Alg. 2 line 29): generalized problem
+/// `ḠᴴḠ z = θ Ḡᴴ (ŴᴴV̂) z`. All inputs real; returns m×k' real P.
+pub fn harmonic_ritz_cycle(g_bar: &Mat, w_h_v: &Mat, k: usize) -> Result<Mat> {
+    let m = g_bar.ncols;
+    assert_eq!(g_bar.nrows, m + 1);
+    assert_eq!(w_h_v.nrows, m + 1);
+    assert_eq!(w_h_v.ncols, m);
+    let gt = g_bar.transpose();
+    let a = gt.matmul(g_bar); // m×m
+    let b = gt.matmul(w_h_v); // m×m
+    let e = eig_generalized(&ZMat::from_real(&a), &ZMat::from_real(&b))?;
+    Ok(realify_smallest(&e, k.min(m.saturating_sub(1)).max(1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::c64::C64;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn realify_handles_conjugate_pairs() {
+        // Eigen-decomposition of a 2x2 rotation-like matrix: one conj pair.
+        let th = 0.9f64;
+        let m = Mat::from_rows(&[&[th.cos(), -th.sin()], &[th.sin(), th.cos()]]);
+        let e = eig(&ZMat::from_real(&m)).unwrap();
+        let p = realify_smallest(&e, 2);
+        assert_eq!(p.ncols, 2);
+        // Columns must be linearly independent (span R^2 here).
+        let (q, r) = p.qr_thin();
+        assert!(q.ncols == 2 && r[(1, 1)].abs() > 1e-8);
+    }
+
+    #[test]
+    fn realify_orders_by_magnitude() {
+        let mut z = ZMat::zeros(3, 3);
+        z[(0, 0)] = C64::real(10.0);
+        z[(1, 1)] = C64::real(0.1);
+        z[(2, 2)] = C64::real(-1.0);
+        let e = eig(&z).unwrap();
+        let p = realify_smallest(&e, 1);
+        assert_eq!(p.ncols, 1);
+        // smallest |θ| = 0.1 → its eigenvector is e2.
+        assert!(p.col(0)[1].abs() > 0.99, "{:?}", p.col(0));
+    }
+
+    #[test]
+    fn initial_harmonic_ritz_shapes() {
+        let mut rng = Rng::new(21);
+        let j = 12;
+        let mut h_bar = Mat::zeros(j + 1, j);
+        // Build a plausible Hessenberg: random upper + positive subdiagonal.
+        for c in 0..j {
+            for r in 0..=c {
+                h_bar[(r, c)] = rng.normal();
+            }
+            h_bar[(c, c)] += 4.0; // keep well-conditioned
+            h_bar[(c + 1, c)] = rng.uniform() + 0.5;
+        }
+        let p = harmonic_ritz_initial(&h_bar, 4).unwrap();
+        assert_eq!(p.nrows, j);
+        assert!(p.ncols >= 1 && p.ncols <= 4);
+        // Columns normalized.
+        for c in 0..p.ncols {
+            assert!((crate::la::norm2(p.col(c)) - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cycle_harmonic_ritz_reduces_to_standard_when_b_identityish() {
+        // With ŴᴴV̂ = [I; 0] (the m×m identity stacked over a zero row) and
+        // Ḡ = [T; 0], the problem becomes TᴴT z = θ Tᴴ z ⇔ T z = θ z.
+        let t = Mat::from_rows(&[&[2.0, 1.0], &[0.0, 5.0]]);
+        let mut g_bar = Mat::zeros(3, 2);
+        let mut whv = Mat::zeros(3, 2);
+        for c in 0..2 {
+            for r in 0..2 {
+                g_bar[(r, c)] = t[(r, c)];
+                whv[(r, c)] = if r == c { 1.0 } else { 0.0 };
+            }
+        }
+        let p = harmonic_ritz_cycle(&g_bar, &whv, 1).unwrap();
+        // Smallest eigenvalue of T is 2 with eigenvector e1.
+        assert!(p.col(0)[0].abs() > 0.99, "{:?}", p.col(0));
+    }
+}

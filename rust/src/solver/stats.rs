@@ -1,0 +1,82 @@
+//! Solve statistics and configuration shared by GMRES and GCRO-DR.
+
+/// Why a solve stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// Relative residual dropped below tolerance.
+    Converged,
+    /// Hit the iteration cap without converging (the paper's Fig-13
+    /// stability metric counts these).
+    MaxIters,
+    /// Lucky or unlucky exact breakdown in the Arnoldi process.
+    Breakdown,
+}
+
+/// Per-system solve outcome.
+#[derive(Debug, Clone)]
+pub struct SolveStats {
+    /// Inner (matrix-vector product) iterations performed.
+    pub iters: usize,
+    /// Wall-clock seconds for this system.
+    pub seconds: f64,
+    /// Final relative residual ‖b − Ax‖ / ‖b‖.
+    pub rel_residual: f64,
+    pub stop: StopReason,
+    /// Optional residual trace: (cumulative iters, relative residual) pairs
+    /// recorded at each restart/cycle boundary — drives Figs 1/11/12.
+    pub trace: Vec<(usize, f64)>,
+}
+
+impl SolveStats {
+    pub fn converged(&self) -> bool {
+        self.stop == StopReason::Converged
+    }
+}
+
+/// Shared solver configuration.
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    /// Relative residual tolerance.
+    pub tol: f64,
+    /// Max inner iterations per system (paper: 10⁴).
+    pub max_iters: usize,
+    /// Krylov cycle length m (PETSc GMRES restart default: 30).
+    pub m: usize,
+    /// Recycle-space dimension k (GCRO-DR only).
+    pub k: usize,
+    /// Record a residual trace (slightly more bookkeeping).
+    pub record_trace: bool,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig { tol: 1e-8, max_iters: 10_000, m: 30, k: 10, record_trace: false }
+    }
+}
+
+impl SolverConfig {
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    pub fn with_m(mut self, m: usize) -> Self {
+        self.m = m;
+        self
+    }
+
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    pub fn with_max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = max_iters;
+        self
+    }
+
+    pub fn with_trace(mut self, record: bool) -> Self {
+        self.record_trace = record;
+        self
+    }
+}

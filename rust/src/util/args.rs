@@ -1,0 +1,128 @@
+//! Minimal CLI argument parser (the registry is offline, so no `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional args
+//! and subcommands. Typed getters parse on demand and report readable errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, key→value options and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    match it.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.opts.insert(rest.to_string(), v);
+                        }
+                        _ => {
+                            out.opts.insert(rest.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Raw string option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a readable message on bad input.
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(s) => match s.parse() {
+                Ok(v) => v,
+                Err(e) => panic!("--{key}: cannot parse {s:?}: {e}"),
+            },
+        }
+    }
+
+    /// Boolean flag (present, `=true`, or `=1`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Positional arguments after the subcommand.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(s) => s.split(',').map(|t| t.trim().to_string()).filter(|t| !t.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("generate --family darcy --n 6400 --tol=1e-8 --sort extra");
+        assert_eq!(a.command.as_deref(), Some("generate"));
+        assert_eq!(a.get("family"), Some("darcy"));
+        assert_eq!(a.num_or("n", 0usize), 6400);
+        assert!((a.num_or("tol", 0.0f64) - 1e-8).abs() < 1e-20);
+        assert_eq!(a.get("sort"), Some("extra"));
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("run --full --quiet --k 5");
+        assert!(a.flag("full"));
+        assert!(a.flag("quiet"));
+        assert_eq!(a.num_or("k", 0usize), 5);
+        assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("t --preconds jacobi,sor, ilu");
+        assert_eq!(a.list_or("preconds", &[]), vec!["jacobi", "sor"]);
+        assert_eq!(a.positional(), &["ilu".to_string()]);
+    }
+}

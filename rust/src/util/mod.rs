@@ -1,0 +1,68 @@
+//! Small self-contained utilities: PRNG, CLI parsing, `.npy` IO, JSON/CSV
+//! emission, timers, table printing and a lightweight property-testing
+//! micro-framework (the container's cargo registry is offline, so the usual
+//! crates — clap, serde, criterion, proptest — are replaced by these).
+
+pub mod args;
+pub mod json;
+pub mod npy;
+pub mod prng;
+pub mod propcheck;
+pub mod table;
+pub mod timer;
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Ordinary least-squares slope of y against x (used for the paper's Fig 11/12
+/// high-precision convergence-slope fits).
+pub fn ols_slope(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    if sxx == 0.0 {
+        0.0
+    } else {
+        sxy / sxx * (n / n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-15);
+        assert!((std_dev(&[1.0, 1.0, 1.0])).abs() < 1e-15);
+    }
+
+    #[test]
+    fn slope_of_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        assert!((ols_slope(&x, &y) - 2.0).abs() < 1e-12);
+    }
+}

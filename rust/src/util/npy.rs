@@ -1,0 +1,214 @@
+//! NumPy `.npy` v1.0 reader/writer for f32/f64 arrays.
+//!
+//! The generated datasets are written as `.npy` so the python side (pytest,
+//! notebooks, FNO sanity checks) can `np.load` them directly, and so the
+//! AOT-trained FNO inputs round-trip without a bespoke format.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Dtype tag for the arrays we support.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F64,
+}
+
+impl Dtype {
+    fn descr(self) -> &'static str {
+        match self {
+            Dtype::F32 => "<f4",
+            Dtype::F64 => "<f8",
+        }
+    }
+}
+
+/// A dense row-major array with shape metadata, as stored in `.npy`.
+#[derive(Debug, Clone)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f64>,
+    pub dtype: Dtype,
+}
+
+impl NpyArray {
+    pub fn f64(shape: Vec<usize>, data: Vec<f64>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        NpyArray { shape, data, dtype: Dtype::F64 }
+    }
+
+    pub fn f32(shape: Vec<usize>, data: Vec<f64>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        NpyArray { shape, data, dtype: Dtype::F32 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// f32 copy of the payload (for PJRT literals).
+    pub fn as_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+}
+
+fn header_string(dtype: Dtype, shape: &[usize]) -> String {
+    let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+    let tup = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", dims[0]),
+        _ => format!("({})", dims.join(", ")),
+    };
+    format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+        dtype.descr(),
+        tup
+    )
+}
+
+/// Write an array to `.npy` (v1.0).
+pub fn write(path: &Path, arr: &NpyArray) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut header = header_string(arr.dtype, &arr.shape);
+    // Total header (magic 6 + version 2 + len 2 + dict) must be a multiple of 64.
+    let base = 6 + 2 + 2;
+    let pad = 64 - ((base + header.len() + 1) % 64);
+    header.push_str(&" ".repeat(pad % 64));
+    header.push('\n');
+
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(b"\x93NUMPY\x01\x00")?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    match arr.dtype {
+        Dtype::F64 => {
+            for &x in &arr.data {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Dtype::F32 => {
+            for &x in &arr.data {
+                f.write_all(&(x as f32).to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a `.npy` file written by us or by numpy (little-endian f4/f8 only).
+pub fn read(path: &Path) -> Result<NpyArray> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic[..6] != b"\x93NUMPY" {
+        bail!("{}: not an npy file", path.display());
+    }
+    let header_len = if magic[6] == 1 {
+        let mut b = [0u8; 2];
+        f.read_exact(&mut b)?;
+        u16::from_le_bytes(b) as usize
+    } else {
+        let mut b = [0u8; 4];
+        f.read_exact(&mut b)?;
+        u32::from_le_bytes(b) as usize
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8_lossy(&header);
+
+    let dtype = if header.contains("<f8") {
+        Dtype::F64
+    } else if header.contains("<f4") {
+        Dtype::F32
+    } else {
+        bail!("unsupported dtype in header: {header}");
+    };
+    if header.contains("'fortran_order': True") {
+        bail!("fortran_order arrays not supported");
+    }
+    let shape = parse_shape(&header)?;
+    let count: usize = shape.iter().product();
+    let mut data = Vec::with_capacity(count);
+    match dtype {
+        Dtype::F64 => {
+            let mut buf = vec![0u8; count * 8];
+            f.read_exact(&mut buf)?;
+            for c in buf.chunks_exact(8) {
+                data.push(f64::from_le_bytes(c.try_into().unwrap()));
+            }
+        }
+        Dtype::F32 => {
+            let mut buf = vec![0u8; count * 4];
+            f.read_exact(&mut buf)?;
+            for c in buf.chunks_exact(4) {
+                data.push(f32::from_le_bytes(c.try_into().unwrap()) as f64);
+            }
+        }
+    }
+    Ok(NpyArray { shape, data, dtype })
+}
+
+fn parse_shape(header: &str) -> Result<Vec<usize>> {
+    let start = header.find("'shape':").context("no shape key")? + 8;
+    let rest = &header[start..];
+    let open = rest.find('(').context("no shape tuple")?;
+    let close = rest.find(')').context("unclosed shape tuple")?;
+    let inner = &rest[open + 1..close];
+    let mut shape = Vec::new();
+    for tok in inner.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        shape.push(tok.parse::<usize>().with_context(|| format!("bad dim {tok:?}"))?);
+    }
+    Ok(shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f64() {
+        let dir = std::env::temp_dir().join("skr_npy_test");
+        let p = dir.join("a.npy");
+        let arr = NpyArray::f64(vec![3, 4], (0..12).map(|i| i as f64 * 0.5).collect());
+        write(&p, &arr).unwrap();
+        let back = read(&p).unwrap();
+        assert_eq!(back.shape, vec![3, 4]);
+        assert_eq!(back.data, arr.data);
+        assert_eq!(back.dtype, Dtype::F64);
+    }
+
+    #[test]
+    fn roundtrip_f32_and_scalar_shapes() {
+        let dir = std::env::temp_dir().join("skr_npy_test");
+        let p = dir.join("b.npy");
+        let arr = NpyArray::f32(vec![5], vec![1.5, -2.0, 0.0, 3.25, 4.0]);
+        write(&p, &arr).unwrap();
+        let back = read(&p).unwrap();
+        assert_eq!(back.shape, vec![5]);
+        assert_eq!(back.data, arr.data);
+        assert_eq!(back.dtype, Dtype::F32);
+    }
+
+    #[test]
+    fn header_is_64_aligned() {
+        let dir = std::env::temp_dir().join("skr_npy_test");
+        let p = dir.join("c.npy");
+        write(&p, &NpyArray::f64(vec![2, 2, 2], vec![0.0; 8])).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + hlen) % 64, 0);
+    }
+}

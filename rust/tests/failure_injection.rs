@@ -1,0 +1,229 @@
+//! Failure-injection and edge-case tests: the pipeline and solvers must fail
+//! loudly (or degrade gracefully) on bad inputs rather than hang, panic, or
+//! return silently-wrong data.
+
+use skr::coordinator::{Pipeline, PipelineConfig};
+use skr::la::Csr;
+use skr::pde::FamilyKind;
+use skr::precond::{Identity, PrecondKind};
+use skr::solver::{gcrodr, gmres, Engine, Recycler, SolverConfig, StopReason};
+use skr::util::prng::Rng;
+
+// ---------------------------------------------------------------------------
+// Solver edge cases.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn singular_matrix_does_not_hang() {
+    // Rank-deficient A with b outside the range: the solver must stop at
+    // max_iters (or breakdown), never loop forever, and must not report
+    // convergence.
+    let n = 40;
+    let mut trips = Vec::new();
+    for i in 0..n - 1 {
+        trips.push((i, i, 1.0));
+    }
+    // Last row entirely zero.
+    let a = Csr::from_triplets(n, n, &trips);
+    let mut b = vec![0.0; n];
+    b[n - 1] = 1.0; // unreachable component
+    let cfg = SolverConfig::default().with_tol(1e-12).with_max_iters(200);
+    let mut x = vec![0.0; n];
+    let s = gmres(&a, &b, &mut x, &Identity, &cfg);
+    assert_ne!(s.stop, StopReason::Converged, "{s:?}");
+    assert!(s.iters <= 210);
+    let mut x2 = vec![0.0; n];
+    let mut rec = Recycler::new();
+    let s2 = gcrodr(&a, &b, &mut x2, &Identity, &cfg, &mut rec);
+    assert_ne!(s2.stop, StopReason::Converged, "{s2:?}");
+}
+
+#[test]
+fn consistent_singular_system_converges_to_a_solution() {
+    // Rank-deficient but consistent: lucky breakdown should produce a valid
+    // solution (b in range(A)).
+    let n = 30;
+    let mut trips = Vec::new();
+    for i in 0..n - 1 {
+        trips.push((i, i, 2.0));
+    }
+    let a = Csr::from_triplets(n, n, &trips);
+    let mut xtrue = vec![1.0; n];
+    xtrue[n - 1] = 0.0;
+    let b = a.matvec(&xtrue);
+    let cfg = SolverConfig::default().with_tol(1e-10).with_max_iters(500);
+    let mut x = vec![0.0; n];
+    let s = gmres(&a, &b, &mut x, &Identity, &cfg);
+    assert!(s.rel_residual < 1e-9, "{s:?}");
+}
+
+#[test]
+fn nonzero_initial_guess_is_honoured() {
+    let mut rng = Rng::new(77);
+    let n = 60;
+    let mut trips = Vec::new();
+    for i in 0..n {
+        trips.push((i, i, 4.0));
+        if i + 1 < n {
+            trips.push((i, i + 1, -1.0));
+            trips.push((i + 1, i, -1.0));
+        }
+    }
+    let a = Csr::from_triplets(n, n, &trips);
+    let xtrue = rng.normals(n);
+    let b = a.matvec(&xtrue);
+    // Start exactly at the solution: zero iterations.
+    let mut x = xtrue.clone();
+    let s = gmres(&a, &b, &mut x, &Identity, &SolverConfig::default());
+    assert_eq!(s.iters, 0);
+    assert!(s.converged());
+    let mut x2 = xtrue.clone();
+    let mut rec = Recycler::new();
+    let s2 = gcrodr(&a, &b, &mut x2, &Identity, &SolverConfig::default(), &mut rec);
+    assert_eq!(s2.iters, 0);
+    assert!(s2.converged());
+}
+
+#[test]
+fn tiny_systems_work() {
+    // n = 1 and n = 2 exercise every degenerate bound in the Arnoldi loop.
+    for n in [1usize, 2, 3] {
+        let trips: Vec<(usize, usize, f64)> = (0..n).map(|i| (i, i, (i + 2) as f64)).collect();
+        let a = Csr::from_triplets(n, n, &trips);
+        let b = vec![1.0; n];
+        let mut x = vec![0.0; n];
+        let s = gmres(&a, &b, &mut x, &Identity, &SolverConfig::default().with_tol(1e-12));
+        assert!(s.converged(), "n={n} {s:?}");
+        let mut x2 = vec![0.0; n];
+        let mut rec = Recycler::new();
+        let s2 = gcrodr(&a, &b, &mut x2, &Identity, &SolverConfig::default().with_tol(1e-12), &mut rec);
+        assert!(s2.converged(), "n={n} {s2:?}");
+        for i in 0..n {
+            assert!((x[i] - 1.0 / (i + 2) as f64).abs() < 1e-10);
+            assert!((x2[i] - 1.0 / (i + 2) as f64).abs() < 1e-10);
+        }
+    }
+}
+
+#[test]
+fn m_smaller_than_k_is_clamped_not_panicking() {
+    let mut rng = Rng::new(5);
+    let n = 50;
+    let mut trips = Vec::new();
+    for i in 0..n {
+        trips.push((i, i, 3.0 + rng.normal().abs()));
+    }
+    let a = Csr::from_triplets(n, n, &trips);
+    let b = rng.normals(n);
+    // Pathological configs: k ≥ m, m tiny.
+    for (m, k) in [(2usize, 10usize), (3, 3), (2, 1)] {
+        let cfg = SolverConfig::default().with_tol(1e-8).with_m(m).with_k(k);
+        let mut x = vec![0.0; n];
+        let mut rec = Recycler::new();
+        let s = gcrodr(&a, &b, &mut x, &Identity, &cfg, &mut rec);
+        assert!(s.converged(), "m={m} k={k}: {s:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline failure injection.
+// ---------------------------------------------------------------------------
+
+fn base_cfg() -> PipelineConfig {
+    let mut cfg = PipelineConfig::default();
+    cfg.family = FamilyKind::Darcy;
+    cfg.unknowns = 64;
+    cfg.count = 6;
+    cfg.engine = Engine::SkrRecycle;
+    cfg.precond = PrecondKind::Jacobi;
+    cfg.solver.tol = 1e-8;
+    cfg.threads = 2;
+    cfg.seed = 1;
+    cfg
+}
+
+#[test]
+fn unwritable_output_directory_is_an_error_not_a_panic() {
+    let mut cfg = base_cfg();
+    // A path under a *file* cannot be created.
+    let blocker = std::env::temp_dir().join("skr_blocker_file");
+    std::fs::write(&blocker, b"x").unwrap();
+    cfg.out_dir = Some(blocker.join("sub"));
+    let r = Pipeline::new(cfg).run();
+    assert!(r.is_err(), "expected error for unwritable out_dir");
+    let _ = std::fs::remove_file(&blocker);
+}
+
+#[test]
+fn zero_count_pipeline_is_a_clean_noop() {
+    let mut cfg = base_cfg();
+    cfg.count = 0;
+    let r = Pipeline::new(cfg).run().unwrap();
+    assert_eq!(r.metrics.systems, 0);
+    assert!(r.per_system.is_empty());
+    assert!(r.order.is_empty());
+}
+
+#[test]
+fn more_threads_than_systems_is_fine() {
+    let mut cfg = base_cfg();
+    cfg.count = 3;
+    cfg.threads = 16;
+    let r = Pipeline::new(cfg).run().unwrap();
+    assert_eq!(r.metrics.systems, 3);
+}
+
+#[test]
+fn queue_depth_one_still_completes() {
+    // Tightest possible backpressure: every solve blocks on the writer.
+    let dir = std::env::temp_dir().join("skr_q1");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = base_cfg();
+    cfg.queue_depth = 1;
+    cfg.out_dir = Some(dir.clone());
+    let r = Pipeline::new(cfg).run().unwrap();
+    assert_eq!(r.metrics.systems, 6);
+    assert_eq!(r.dataset.unwrap().count, 6);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn max_iter_hits_are_counted() {
+    let mut cfg = base_cfg();
+    cfg.unknowns = 400;
+    cfg.count = 2;
+    cfg.engine = Engine::Gmres;
+    cfg.precond = PrecondKind::None;
+    cfg.solver.tol = 1e-14;
+    cfg.solver.max_iters = 15; // guaranteed to be insufficient
+    let r = Pipeline::new(cfg).run().unwrap();
+    assert_eq!(r.metrics.max_iter_hits, 2, "{:?}", r.metrics);
+}
+
+#[test]
+fn solver_tolerance_is_respected_by_dataset() {
+    // Solutions exported by the pipeline must actually satisfy ‖b−Ax‖/‖b‖ ≤
+    // tol·1.5 when re-checked against freshly regenerated systems.
+    use skr::pde::generate;
+    let dir = std::env::temp_dir().join("skr_tolcheck");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = base_cfg();
+    cfg.solver.tol = 1e-9;
+    cfg.out_dir = Some(dir.clone());
+    let seed = cfg.seed;
+    let unknowns = cfg.unknowns;
+    let count = cfg.count;
+    Pipeline::new(cfg).run().unwrap();
+    let (_, sols, _) = skr::coordinator::dataset::load(&dir).unwrap();
+    let fam = FamilyKind::Darcy.build(unknowns);
+    let systems = generate(fam.as_ref(), count, seed).unwrap();
+    for (i, sys) in systems.iter().enumerate() {
+        let n = sys.b.len();
+        let x = &sols.data[i * n..(i + 1) * n];
+        let ax = sys.a.matvec(x);
+        let rnorm: f64 = sys.b.iter().zip(&ax).map(|(b, a)| (b - a) * (b - a)).sum::<f64>().sqrt();
+        let bnorm: f64 = sys.b.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(rnorm / bnorm < 1.5e-9, "system {i}: rel {}", rnorm / bnorm);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

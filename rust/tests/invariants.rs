@@ -1,0 +1,648 @@
+//! Cross-module property and invariant tests over the public API: linear
+//! algebra identities, solver correctness invariants, sorter permutation
+//! properties, preconditioner algebra, PDE family determinism, and dataset
+//! round-trips. These complement the per-module unit tests.
+
+use skr::coordinator::sorter::{chain_cost, dist2, sort_order, SortStrategy};
+use skr::coordinator::{Pipeline, PipelineConfig};
+use skr::la::dense::Mat;
+use skr::la::{axpy, dot, norm2, Csr};
+use skr::pde::{generate, FamilyKind};
+use skr::precond::PrecondKind;
+use skr::solver::{gcrodr, gmres, Engine, Recycler, SolverConfig};
+use skr::util::npy::{self, NpyArray};
+use skr::util::prng::Rng;
+use skr::util::propcheck::{check_msg, Config};
+
+// ---------------------------------------------------------------------------
+// Linear-algebra identities (propcheck).
+// ---------------------------------------------------------------------------
+
+fn random_mat(rng: &mut Rng, nrows: usize, ncols: usize) -> Mat {
+    let mut m = Mat::zeros(nrows, ncols);
+    for v in &mut m.data {
+        *v = rng.normal();
+    }
+    m
+}
+
+#[test]
+fn qr_reconstructs_and_q_is_orthonormal() {
+    check_msg(
+        "qr identity",
+        Config { cases: 40, seed: 0xA11CE },
+        |rng| {
+            let nrows = 3 + (rng.next_u64() % 12) as usize;
+            let ncols = 1 + (rng.next_u64() % nrows as u64) as usize;
+            random_mat(rng, nrows, ncols)
+        },
+        |a| {
+            let (q, r) = a.qr_thin();
+            // QᵀQ = I
+            let qtq = q.transpose().matmul(&q);
+            for i in 0..qtq.nrows {
+                for j in 0..qtq.ncols {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    if (qtq[(i, j)] - want).abs() > 1e-10 {
+                        return Err(format!("QᵀQ[{i},{j}] = {}", qtq[(i, j)]));
+                    }
+                }
+            }
+            // QR = A
+            let qr = q.matmul(&r);
+            for i in 0..a.nrows {
+                for j in 0..a.ncols {
+                    if (qr[(i, j)] - a[(i, j)]).abs() > 1e-10 {
+                        return Err(format!("QR≠A at ({i},{j})"));
+                    }
+                }
+            }
+            // R upper triangular
+            for j in 0..r.ncols {
+                for i in (j + 1)..r.nrows {
+                    if r[(i, j)].abs() > 1e-12 {
+                        return Err(format!("R not triangular at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lstsq_residual_is_orthogonal_to_range() {
+    check_msg(
+        "lstsq normal equations",
+        Config { cases: 40, seed: 0xB0B },
+        |rng| {
+            let nrows = 4 + (rng.next_u64() % 10) as usize;
+            let ncols = 1 + (rng.next_u64() % (nrows as u64 - 1)) as usize;
+            let a = random_mat(rng, nrows, ncols);
+            let b = rng.normals(nrows);
+            (a, b)
+        },
+        |(a, b)| {
+            let y = a.lstsq(b).map_err(|e| e.to_string())?;
+            let ay = a.matvec(&y);
+            let r: Vec<f64> = b.iter().zip(&ay).map(|(bi, ai)| bi - ai).collect();
+            // Aᵀ r = 0 for the least-squares minimiser.
+            let atr = a.matvec_t(&r);
+            for (j, v) in atr.iter().enumerate() {
+                if v.abs() > 1e-8 {
+                    return Err(format!("Aᵀr[{j}] = {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn csr_matvec_agrees_with_dense() {
+    check_msg(
+        "csr vs dense matvec",
+        Config { cases: 40, seed: 0xCAFE },
+        |rng| {
+            let n = 2 + (rng.next_u64() % 20) as usize;
+            let mut trips = Vec::new();
+            let mut dense = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    if rng.next_u64() % 4 == 0 {
+                        let v = rng.normal();
+                        trips.push((i, j, v));
+                        dense[(i, j)] = v;
+                    }
+                }
+            }
+            // Guarantee a nonzero diagonal so the matrix is usable elsewhere.
+            for i in 0..n {
+                trips.push((i, i, 1.0));
+                dense[(i, i)] += 1.0;
+            }
+            let x = rng.normals(n);
+            (Csr::from_triplets(n, n, &trips), dense, x)
+        },
+        |(a, dense, x)| {
+            let y1 = a.matvec(x);
+            let y2 = dense.matvec(x);
+            for i in 0..y1.len() {
+                if (y1[i] - y2[i]).abs() > 1e-10 {
+                    return Err(format!("row {i}: {} vs {}", y1[i], y2[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn csr_transpose_is_involutive_and_adjoint() {
+    check_msg(
+        "transpose adjoint",
+        Config { cases: 30, seed: 0xD00D },
+        |rng| {
+            let n = 3 + (rng.next_u64() % 15) as usize;
+            let mut trips = Vec::new();
+            for i in 0..n {
+                trips.push((i, i, 1.0 + rng.normal().abs()));
+                let j = (rng.next_u64() % n as u64) as usize;
+                trips.push((i, j, rng.normal()));
+            }
+            (Csr::from_triplets(n, n, &trips), rng.normals(n), rng.normals(n))
+        },
+        |(a, x, y)| {
+            let at = a.transpose();
+            // ⟨Ax, y⟩ = ⟨x, Aᵀy⟩
+            let lhs = dot(&a.matvec(x), y);
+            let rhs = dot(x, &at.matvec(y));
+            if (lhs - rhs).abs() > 1e-9 * (1.0 + lhs.abs()) {
+                return Err(format!("{lhs} vs {rhs}"));
+            }
+            // (Aᵀ)ᵀ = A as an operator
+            let back = at.transpose();
+            let d: f64 = a
+                .matvec(x)
+                .iter()
+                .zip(back.matvec(x))
+                .map(|(u, v)| (u - v).abs())
+                .fold(0.0, f64::max);
+            if d > 1e-12 {
+                return Err(format!("involution error {d}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Preconditioner algebra.
+// ---------------------------------------------------------------------------
+
+/// Random strictly diagonally dominant sparse matrix (all preconditioners
+/// are well-defined on it).
+fn random_sdd(rng: &mut Rng, n: usize) -> Csr {
+    let mut trips = Vec::new();
+    for i in 0..n {
+        let mut offsum = 0.0;
+        for _ in 0..3 {
+            let j = (rng.next_u64() % n as u64) as usize;
+            if j != i {
+                let v = 0.5 * rng.normal();
+                offsum += v.abs();
+                trips.push((i, j, v));
+            }
+        }
+        trips.push((i, i, offsum + 1.0 + rng.normal().abs()));
+    }
+    Csr::from_triplets(n, n, &trips)
+}
+
+#[test]
+fn preconditioners_are_linear_operators() {
+    check_msg(
+        "precond linearity",
+        Config { cases: 10, seed: 0x11111 },
+        |rng| {
+            let n = 16 + (rng.next_u64() % 40) as usize;
+            (random_sdd(rng, n), rng.normals(n), rng.normals(n), rng.normal())
+        },
+        |(a, u, v, alpha)| {
+            let n = u.len();
+            for kind in PrecondKind::ALL {
+                let p = kind.build(a).map_err(|e| e.to_string())?;
+                let mut pu = vec![0.0; n];
+                let mut pv = vec![0.0; n];
+                let mut pw = vec![0.0; n];
+                p.apply(u, &mut pu);
+                p.apply(v, &mut pv);
+                let w: Vec<f64> = u.iter().zip(v).map(|(a, b)| a + alpha * b).collect();
+                p.apply(&w, &mut pw);
+                for i in 0..n {
+                    let want = pu[i] + alpha * pv[i];
+                    let scale = 1.0 + want.abs();
+                    if (pw[i] - want).abs() > 1e-9 * scale {
+                        return Err(format!("{kind:?} not linear at {i}: {} vs {want}", pw[i]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn jacobi_inverts_pure_diagonal_exactly() {
+    let n = 24;
+    let trips: Vec<(usize, usize, f64)> = (0..n).map(|i| (i, i, (i + 1) as f64)).collect();
+    let a = Csr::from_triplets(n, n, &trips);
+    for kind in [PrecondKind::Jacobi, PrecondKind::BJacobi, PrecondKind::Ilu, PrecondKind::Icc] {
+        let p = kind.build(&a).unwrap();
+        let r: Vec<f64> = (0..n).map(|i| (i + 1) as f64).collect();
+        let mut z = vec![0.0; n];
+        p.apply(&r, &mut z);
+        for (i, v) in z.iter().enumerate() {
+            assert!((v - 1.0).abs() < 1e-12, "{kind:?} z[{i}] = {v}");
+        }
+    }
+}
+
+#[test]
+fn preconditioned_gmres_converges_for_every_kind() {
+    let mut rng = Rng::new(0x5EED5);
+    let a = random_sdd(&mut rng, 120);
+    let xtrue = rng.normals(120);
+    let b = a.matvec(&xtrue);
+    for kind in PrecondKind::ALL {
+        let p = kind.build(&a).unwrap();
+        let mut x = vec![0.0; 120];
+        let s = gmres(&a, &b, &mut x, p.as_ref(), &SolverConfig::default().with_tol(1e-10));
+        assert!(s.converged(), "{kind:?} {s:?}");
+        let err: f64 = x.iter().zip(&xtrue).map(|(u, v)| (u - v).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-6, "{kind:?} err {err}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Solver invariants.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gmres_final_residual_matches_reported() {
+    check_msg(
+        "gmres residual honesty",
+        Config { cases: 12, seed: 0x77777 },
+        |rng| {
+            let n = 30 + (rng.next_u64() % 80) as usize;
+            let a = random_sdd(rng, n);
+            let b = rng.normals(n);
+            (a, b)
+        },
+        |(a, b)| {
+            let mut x = vec![0.0; b.len()];
+            let s = gmres(a, b, &mut x, &skr::precond::Identity, &SolverConfig::default().with_tol(1e-9));
+            let mut r = b.clone();
+            let ax = a.matvec(&x);
+            axpy(-1.0, &ax, &mut r);
+            let rel = norm2(&r) / norm2(b).max(1e-300);
+            if (rel - s.rel_residual).abs() > 1e-7 {
+                return Err(format!("reported {} vs true {rel}", s.rel_residual));
+            }
+            if s.converged() && rel > 1e-8 {
+                return Err(format!("claimed convergence at rel {rel}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gcrodr_equals_gmres_solution_on_one_system() {
+    check_msg(
+        "gcrodr correctness",
+        Config { cases: 10, seed: 0x88888 },
+        |rng| {
+            let n = 40 + (rng.next_u64() % 60) as usize;
+            let a = random_sdd(rng, n);
+            let b = rng.normals(n);
+            (a, b)
+        },
+        |(a, b)| {
+            let cfg = SolverConfig::default().with_tol(1e-11);
+            let mut x1 = vec![0.0; b.len()];
+            gmres(a, b, &mut x1, &skr::precond::Identity, &cfg);
+            let mut x2 = vec![0.0; b.len()];
+            let mut rec = Recycler::new();
+            gcrodr(a, b, &mut x2, &skr::precond::Identity, &cfg, &mut rec);
+            let d: f64 = x1.iter().zip(&x2).map(|(u, v)| (u - v).abs()).fold(0.0, f64::max);
+            let scale = x1.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1.0);
+            if d > 1e-7 * scale {
+                return Err(format!("solutions differ by {d}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gcrodr_early_exit_never_overshoots_cycle() {
+    // With a loose tolerance the solver must stop mid-cycle: total iterations
+    // strictly below one restart length on an easy system.
+    let mut rng = Rng::new(0x99999);
+    let a = random_sdd(&mut rng, 200);
+    let xtrue = rng.normals(200);
+    let b = a.matvec(&xtrue);
+    let cfg = SolverConfig::default().with_tol(1e-1).with_m(30).with_k(10);
+    let mut rec = Recycler::new();
+    let mut x = vec![0.0; 200];
+    let s = gcrodr(&a, &b, &mut x, &skr::precond::Identity, &cfg, &mut rec);
+    assert!(s.converged());
+    assert!(s.iters < 30, "early exit failed: {} iters", s.iters);
+}
+
+#[test]
+fn recycler_fast_path_skips_reseed_on_identical_operator() {
+    let mut rng = Rng::new(0xAAAAA);
+    let a = random_sdd(&mut rng, 150);
+    let cfg = SolverConfig::default().with_tol(1e-10).with_m(25).with_k(6);
+    let mut rec = Recycler::new();
+    let b1 = rng.normals(150);
+    let mut x = vec![0.0; 150];
+    gcrodr(&a, &b1, &mut x, &skr::precond::Identity, &cfg, &mut rec);
+    // Same operator, new rhs: warm solve.
+    let b2 = rng.normals(150);
+    let mut x2 = vec![0.0; 150];
+    let s_same = gcrodr(&a, &b2, &mut x2, &skr::precond::Identity, &cfg, &mut rec);
+    // Perturbed operator forces the k reseed applies.
+    let a2 = a.add_diag(1e-6);
+    let mut rec2 = Recycler::new();
+    let mut x3 = vec![0.0; 150];
+    gcrodr(&a, &b1, &mut x3, &skr::precond::Identity, &cfg, &mut rec2);
+    let mut x4 = vec![0.0; 150];
+    let s_diff = gcrodr(&a2, &b2, &mut x4, &skr::precond::Identity, &cfg, &mut rec2);
+    assert!(s_same.converged() && s_diff.converged());
+    // Both must solve correctly; the identical-operator path does not pay
+    // the reseed so it can never need *more* iterations.
+    assert!(
+        s_same.iters <= s_diff.iters,
+        "fast path {} vs reseed path {}",
+        s_same.iters,
+        s_diff.iters
+    );
+}
+
+#[test]
+fn recycler_survives_dimension_change() {
+    let mut rng = Rng::new(0xBBBBB);
+    let a1 = random_sdd(&mut rng, 90);
+    let b1 = rng.normals(90);
+    let cfg = SolverConfig::default().with_tol(1e-9);
+    let mut rec = Recycler::new();
+    let mut x1 = vec![0.0; 90];
+    let s1 = gcrodr(&a1, &b1, &mut x1, &skr::precond::Identity, &cfg, &mut rec);
+    assert!(s1.converged());
+    assert!(rec.dim() > 0);
+    // Different-sized system with the same recycler must not panic and must
+    // still converge (the stale space is dropped).
+    let a2 = random_sdd(&mut rng, 140);
+    let b2 = rng.normals(140);
+    let mut x2 = vec![0.0; 140];
+    let s2 = gcrodr(&a2, &b2, &mut x2, &skr::precond::Identity, &cfg, &mut rec);
+    assert!(s2.converged(), "{s2:?}");
+}
+
+#[test]
+fn trace_is_recorded_and_monotone_at_cycle_ends() {
+    let mut rng = Rng::new(0xCCCCC);
+    let a = random_sdd(&mut rng, 300);
+    let b = rng.normals(300);
+    let cfg = SolverConfig::default().with_tol(1e-10).with_trace(true);
+    let mut x = vec![0.0; 300];
+    let s = gmres(&a, &b, &mut x, &skr::precond::Identity, &cfg);
+    assert!(s.trace.len() >= 2);
+    assert_eq!(s.trace[0].0, 0);
+    for w in s.trace.windows(2) {
+        assert!(w[1].0 > w[0].0, "iters must increase: {:?}", s.trace);
+        // GMRES minimises the residual over a growing space: restart-boundary
+        // residuals never increase.
+        assert!(w[1].1 <= w[0].1 * (1.0 + 1e-9), "residual went up: {:?}", s.trace);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sorter invariants.
+// ---------------------------------------------------------------------------
+
+fn random_params(rng: &mut Rng, count: usize, dim: usize) -> Vec<Vec<f64>> {
+    (0..count).map(|_| rng.normals(dim)).collect()
+}
+
+#[test]
+fn every_strategy_returns_a_permutation() {
+    check_msg(
+        "sort permutation",
+        Config { cases: 20, seed: 0xDDDDD },
+        |rng| {
+            let count = 1 + (rng.next_u64() % 40) as usize;
+            let dim = 1 + (rng.next_u64() % 8) as usize;
+            random_params(rng, count, dim)
+        },
+        |params| {
+            for strat in [
+                SortStrategy::None,
+                SortStrategy::Greedy,
+                SortStrategy::GroupedGreedy { group_size: 8 },
+                SortStrategy::Hilbert,
+                SortStrategy::Shuffle,
+            ] {
+                let order = sort_order(params, strat, 7);
+                let mut seen = vec![false; params.len()];
+                if order.len() != params.len() {
+                    return Err(format!("{strat:?}: wrong length"));
+                }
+                for &i in &order {
+                    if i >= params.len() || seen[i] {
+                        return Err(format!("{strat:?}: not a permutation"));
+                    }
+                    seen[i] = true;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn greedy_chain_cost_never_worse_than_identity() {
+    check_msg(
+        "greedy improves chain cost",
+        Config { cases: 20, seed: 0xEEEEE },
+        |rng| random_params(rng, 30, 4),
+        |params| {
+            let id: Vec<usize> = (0..params.len()).collect();
+            let greedy = sort_order(params, SortStrategy::Greedy, 0);
+            let c_id = chain_cost(params, &id);
+            let c_greedy = chain_cost(params, &greedy);
+            if c_greedy > c_id * (1.0 + 1e-12) {
+                return Err(format!("greedy {c_greedy} worse than identity {c_id}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn grouped_greedy_is_competitive_with_greedy() {
+    // With group_size ≥ count the grouped variant runs a single greedy chain
+    // (from a projection-chosen start instead of id 0): its tour cost must
+    // be in the same ballpark as plain greedy and beat the identity order.
+    let mut rng = Rng::new(3);
+    let params = random_params(&mut rng, 40, 3);
+    let id: Vec<usize> = (0..params.len()).collect();
+    let greedy = sort_order(&params, SortStrategy::Greedy, 0);
+    let grouped = sort_order(&params, SortStrategy::GroupedGreedy { group_size: 100 }, 0);
+    let (c_id, c_g, c_gg) =
+        (chain_cost(&params, &id), chain_cost(&params, &greedy), chain_cost(&params, &grouped));
+    assert!(c_gg <= c_id, "grouped {c_gg} vs identity {c_id}");
+    assert!(c_gg <= 2.0 * c_g, "grouped {c_gg} vs greedy {c_g}");
+}
+
+#[test]
+fn dist2_is_a_metric_squared() {
+    let mut rng = Rng::new(9);
+    for _ in 0..50 {
+        let a = rng.normals(6);
+        let b = rng.normals(6);
+        assert!((dist2(&a, &b) - dist2(&b, &a)).abs() < 1e-12);
+        assert!(dist2(&a, &a) < 1e-24);
+        assert!(dist2(&a, &b) >= 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PDE family invariants.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn families_are_deterministic_per_seed() {
+    for fam in [FamilyKind::Darcy, FamilyKind::Thermal, FamilyKind::Poisson, FamilyKind::Helmholtz] {
+        let f = fam.build(150);
+        let s1 = generate(f.as_ref(), 3, 11).unwrap();
+        let s2 = generate(f.as_ref(), 3, 11).unwrap();
+        for (a, b) in s1.iter().zip(&s2) {
+            assert_eq!(a.b, b.b, "{fam:?} rhs differs");
+            assert_eq!(a.params, b.params, "{fam:?} params differ");
+            assert_eq!(a.a.values(), b.a.values(), "{fam:?} matrix differs");
+        }
+        // Different seed ⇒ different systems.
+        let s3 = generate(f.as_ref(), 3, 12).unwrap();
+        assert!(
+            s1.iter().zip(&s3).any(|(a, b)| a.params != b.params),
+            "{fam:?} ignores the seed"
+        );
+    }
+}
+
+#[test]
+fn family_systems_are_square_and_match_unknowns() {
+    for fam in [FamilyKind::Darcy, FamilyKind::Thermal, FamilyKind::Poisson, FamilyKind::Helmholtz] {
+        let f = fam.build(200);
+        let sys = &generate(f.as_ref(), 1, 5).unwrap()[0];
+        assert_eq!(sys.a.nrows(), sys.a.ncols(), "{fam:?}");
+        assert_eq!(sys.a.nrows(), sys.b.len(), "{fam:?}");
+        assert_eq!(sys.a.nrows(), f.num_unknowns(), "{fam:?}");
+        assert!(!sys.params.is_empty(), "{fam:?} has no sort key");
+    }
+}
+
+#[test]
+fn poisson_and_thermal_matrices_are_symmetric() {
+    for fam in [FamilyKind::Poisson, FamilyKind::Thermal] {
+        let f = fam.build(150);
+        let sys = &generate(f.as_ref(), 1, 2).unwrap()[0];
+        let at = sys.a.transpose();
+        let d: f64 = sys
+            .a
+            .values()
+            .iter()
+            .zip(at.values())
+            .map(|(u, v)| (u - v).abs())
+            .fold(0.0, f64::max);
+        let scale = sys.a.values().iter().map(|v| v.abs()).fold(0.0, f64::max);
+        assert!(d <= 1e-12 * scale, "{fam:?} asymmetry {d}");
+    }
+}
+
+#[test]
+fn all_families_solvable_to_tight_tolerance() {
+    for fam in [FamilyKind::Darcy, FamilyKind::Thermal, FamilyKind::Poisson, FamilyKind::Helmholtz] {
+        let f = fam.build(120);
+        let sys = &generate(f.as_ref(), 1, 3).unwrap()[0];
+        let p = PrecondKind::Ilu.build(&sys.a).unwrap();
+        let mut x = vec![0.0; sys.b.len()];
+        let s = gmres(&sys.a, &sys.b, &mut x, p.as_ref(), &SolverConfig::default().with_tol(1e-10));
+        assert!(s.converged(), "{fam:?}: {s:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine equivalence through the full pipeline.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipeline_engines_agree_on_solutions() {
+    let dir_g = std::env::temp_dir().join("skr_inv_gmres");
+    let dir_s = std::env::temp_dir().join("skr_inv_skr");
+    for d in [&dir_g, &dir_s] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    let mk = |engine, out: &std::path::Path| {
+        let mut cfg = PipelineConfig::default();
+        cfg.family = FamilyKind::Darcy;
+        cfg.unknowns = 100;
+        cfg.count = 8;
+        cfg.engine = engine;
+        cfg.precond = PrecondKind::Jacobi;
+        cfg.solver.tol = 1e-10;
+        cfg.threads = 1;
+        cfg.seed = 21;
+        cfg.out_dir = Some(out.to_path_buf());
+        Pipeline::new(cfg).run().unwrap()
+    };
+    mk(Engine::Gmres, &dir_g);
+    mk(Engine::SkrRecycle, &dir_s);
+    let (_, sol_g, _) = skr::coordinator::dataset::load(&dir_g).unwrap();
+    let (_, sol_s, _) = skr::coordinator::dataset::load(&dir_s).unwrap();
+    assert_eq!(sol_g.shape, sol_s.shape);
+    let scale = sol_g.data.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1e-30);
+    let maxd = sol_g
+        .data
+        .iter()
+        .zip(&sol_s.data)
+        .map(|(u, v)| (u - v).abs())
+        .fold(0.0, f64::max);
+    assert!(maxd < 1e-5 * scale, "engines disagree: {maxd} (scale {scale})");
+}
+
+// ---------------------------------------------------------------------------
+// npy round-trips.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn npy_roundtrip_preserves_shape_and_data() {
+    check_msg(
+        "npy roundtrip",
+        Config { cases: 20, seed: 0xF00D },
+        |rng| {
+            let d0 = 1 + (rng.next_u64() % 5) as usize;
+            let d1 = 1 + (rng.next_u64() % 7) as usize;
+            let data = rng.normals(d0 * d1);
+            (vec![d0, d1], data)
+        },
+        |(shape, data)| {
+            let path = std::env::temp_dir().join(format!("skr_npy_{}.npy", data.len()));
+            let arr = NpyArray::f64(shape.clone(), data.clone());
+            npy::write(&path, &arr).map_err(|e| e.to_string())?;
+            let back = npy::read(&path).map_err(|e| e.to_string())?;
+            let _ = std::fs::remove_file(&path);
+            if back.shape != *shape {
+                return Err(format!("shape {:?} vs {:?}", back.shape, shape));
+            }
+            for (u, v) in back.data.iter().zip(data) {
+                if (u - v).abs() > 0.0 {
+                    return Err("data mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn npy_rejects_garbage() {
+    let path = std::env::temp_dir().join("skr_npy_garbage.npy");
+    std::fs::write(&path, b"this is not an npy file at all").unwrap();
+    assert!(npy::read(&path).is_err());
+    let _ = std::fs::remove_file(&path);
+}
