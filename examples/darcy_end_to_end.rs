@@ -14,6 +14,7 @@
 //! # faster/slower: --count 96 --steps 150 --n 1024
 //! ```
 
+#![allow(clippy::field_reassign_with_default)]
 use skr::coordinator::{Pipeline, PipelineConfig, SortStrategy};
 use skr::no::{FnoDataset, Trainer};
 use skr::pde::FamilyKind;

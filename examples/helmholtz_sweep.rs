@@ -7,6 +7,7 @@
 //! cargo run --release --example helmholtz_sweep -- --n 2500 --count 24
 //! ```
 
+#![allow(clippy::field_reassign_with_default)]
 use skr::coordinator::PipelineConfig;
 use skr::harness::compare::run_pair;
 use skr::pde::FamilyKind;

@@ -5,6 +5,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
+#![allow(clippy::field_reassign_with_default)]
 use skr::coordinator::{Pipeline, PipelineConfig, SortStrategy};
 use skr::pde::FamilyKind;
 use skr::precond::PrecondKind;

@@ -35,6 +35,13 @@ pub struct PipelineConfig {
     /// parameter dimension ⇒ closer sorted neighbours at a given sample
     /// count (the ablation uses this at CI scale).
     pub grf_alpha: Option<f64>,
+    /// Write a JSONL event trace (spans, per-system solves, per-cycle
+    /// residuals, worker utilization) to this path (`--trace-out`).
+    pub trace_out: Option<std::path::PathBuf>,
+    /// Live progress line on stderr during the solve stage (`--progress`).
+    pub progress: bool,
+    /// Treat any MaxIters/Breakdown system as a run failure (`--strict`).
+    pub strict: bool,
 }
 
 impl Default for PipelineConfig {
@@ -53,6 +60,9 @@ impl Default for PipelineConfig {
             out_dir: None,
             instrument_delta: false,
             grf_alpha: None,
+            trace_out: None,
+            progress: false,
+            strict: false,
         }
     }
 }
@@ -73,6 +83,9 @@ impl PipelineConfig {
             out_dir: args.get("out").map(std::path::PathBuf::from),
             instrument_delta: args.flag("delta"),
             grf_alpha: args.get("grf-alpha").and_then(|v| v.parse().ok()),
+            trace_out: args.get("trace-out").map(std::path::PathBuf::from),
+            progress: args.flag("progress"),
+            strict: args.flag("strict"),
             solver: SolverConfig::default(),
         };
         cfg.solver.tol = args.num_or("tol", 1e-8f64);
@@ -91,7 +104,8 @@ mod tests {
     fn from_args_parses_everything() {
         let args = Args::parse(
             "generate --family helmholtz --n 400 --count 10 --engine gmres \
-             --precond sor --sort none --threads 4 --tol 1e-5 --m 40 --k 12 --seed 9"
+             --precond sor --sort none --threads 4 --tol 1e-5 --m 40 --k 12 --seed 9 \
+             --trace-out /tmp/t.jsonl --progress --strict"
                 .split_whitespace()
                 .map(|s| s.to_string()),
         );
@@ -107,5 +121,17 @@ mod tests {
         assert_eq!(cfg.solver.m, 40);
         assert_eq!(cfg.solver.k, 12);
         assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.trace_out, Some(std::path::PathBuf::from("/tmp/t.jsonl")));
+        assert!(cfg.progress);
+        assert!(cfg.strict);
+    }
+
+    #[test]
+    fn observability_flags_default_off() {
+        let args = Args::parse(["generate".to_string()].into_iter());
+        let cfg = PipelineConfig::from_args(&args).unwrap();
+        assert!(cfg.trace_out.is_none());
+        assert!(!cfg.progress);
+        assert!(!cfg.strict);
     }
 }

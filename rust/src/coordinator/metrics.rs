@@ -1,10 +1,14 @@
 //! Aggregated run metrics — what the paper's tables report: mean per-system
-//! solve time, mean iteration count, max-iteration incidence, wall time.
+//! solve time, mean iteration count, max-iteration incidence, wall time —
+//! plus the observability extensions: final-residual aggregation,
+//! writer-backpressure totals, and Prometheus-style histograms of
+//! iterations, solve seconds and the δ subspace distance.
 
+use crate::obs::Histogram;
 use crate::solver::{SolveStats, StopReason};
 
 /// Aggregate over a batch of per-system stats.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct RunMetrics {
     pub systems: usize,
     /// Sum of per-system solver seconds (excludes generation/sort).
@@ -19,6 +23,40 @@ pub struct RunMetrics {
     pub sort_seconds: f64,
     /// Seconds spent generating/assembling systems.
     pub gen_seconds: f64,
+    /// Worst (largest) final relative residual over all systems.
+    pub rel_residual_worst: f64,
+    /// Sum of final relative residuals (drives [`RunMetrics::mean_rel_residual`]).
+    pub rel_residual_sum: f64,
+    /// Total seconds workers spent blocked in the bounded writer channel.
+    pub backpressure_seconds: f64,
+    /// Per-system inner-iteration histogram.
+    pub iters_hist: Histogram,
+    /// Per-system solve-seconds histogram.
+    pub time_hist: Histogram,
+    /// δ subspace-distance histogram (populated when `--delta` instruments
+    /// the run; spectral flavour).
+    pub delta_hist: Histogram,
+}
+
+impl Default for RunMetrics {
+    fn default() -> Self {
+        RunMetrics {
+            systems: 0,
+            solve_seconds: 0.0,
+            total_iters: 0,
+            max_iter_hits: 0,
+            breakdowns: 0,
+            wall_seconds: 0.0,
+            sort_seconds: 0.0,
+            gen_seconds: 0.0,
+            rel_residual_worst: 0.0,
+            rel_residual_sum: 0.0,
+            backpressure_seconds: 0.0,
+            iters_hist: Histogram::iters_buckets(),
+            time_hist: Histogram::seconds_buckets(),
+            delta_hist: Histogram::unit_buckets(),
+        }
+    }
 }
 
 impl RunMetrics {
@@ -31,6 +69,19 @@ impl RunMetrics {
             StopReason::Breakdown => self.breakdowns += 1,
             StopReason::Converged => {}
         }
+        if s.rel_residual.is_finite() {
+            self.rel_residual_sum += s.rel_residual;
+            if s.rel_residual > self.rel_residual_worst {
+                self.rel_residual_worst = s.rel_residual;
+            }
+        }
+        self.iters_hist.observe(s.iters as f64);
+        self.time_hist.observe(s.seconds);
+    }
+
+    /// Record one δ subspace distance (spectral flavour).
+    pub fn record_delta(&mut self, delta: f64) {
+        self.delta_hist.observe(delta);
     }
 
     /// Mean solve seconds per system.
@@ -60,6 +111,15 @@ impl RunMetrics {
         }
     }
 
+    /// Mean final relative residual over all systems.
+    pub fn mean_rel_residual(&self) -> f64 {
+        if self.systems == 0 {
+            0.0
+        } else {
+            self.rel_residual_sum / self.systems as f64
+        }
+    }
+
     /// Merge two aggregates (for multi-worker reduction).
     pub fn merge(&mut self, other: &RunMetrics) {
         self.systems += other.systems;
@@ -70,6 +130,49 @@ impl RunMetrics {
         self.wall_seconds = self.wall_seconds.max(other.wall_seconds);
         self.sort_seconds += other.sort_seconds;
         self.gen_seconds += other.gen_seconds;
+        self.rel_residual_worst = self.rel_residual_worst.max(other.rel_residual_worst);
+        self.rel_residual_sum += other.rel_residual_sum;
+        self.backpressure_seconds += other.backpressure_seconds;
+        self.iters_hist.merge(&other.iters_hist);
+        self.time_hist.merge(&other.time_hist);
+        self.delta_hist.merge(&other.delta_hist);
+    }
+
+    /// Prometheus text-format snapshot of the whole aggregate (counters,
+    /// gauges and the three histograms) — scrape-compatible, also emitted
+    /// verbatim by `skr report --prometheus`.
+    pub fn prometheus_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut counter = |name: &str, help: &str, v: f64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        counter("skr_systems_total", "systems solved", self.systems as f64);
+        counter("skr_iters_total", "inner solver iterations", self.total_iters as f64);
+        counter(
+            "skr_max_iter_hits_total",
+            "systems that hit the iteration cap",
+            self.max_iter_hits as f64,
+        );
+        counter("skr_breakdowns_total", "systems that ended in breakdown", self.breakdowns as f64);
+        counter("skr_solve_seconds_total", "seconds in the solve stage", self.solve_seconds);
+        counter("skr_gen_seconds_total", "seconds generating systems", self.gen_seconds);
+        counter("skr_sort_seconds_total", "seconds sorting", self.sort_seconds);
+        counter(
+            "skr_backpressure_seconds_total",
+            "seconds workers blocked on the writer channel",
+            self.backpressure_seconds,
+        );
+        let _ = writeln!(out, "# TYPE skr_wall_seconds gauge");
+        let _ = writeln!(out, "skr_wall_seconds {}", self.wall_seconds);
+        let _ = writeln!(out, "# TYPE skr_rel_residual_worst gauge");
+        let _ = writeln!(out, "skr_rel_residual_worst {}", self.rel_residual_worst);
+        self.iters_hist.prometheus("skr_solve_iters", &mut out);
+        self.time_hist.prometheus("skr_solve_seconds", &mut out);
+        self.delta_hist.prometheus("skr_delta", &mut out);
+        out
     }
 }
 
@@ -96,5 +199,65 @@ mod tests {
         m.merge(&other);
         assert_eq!(m.systems, 3);
         assert_eq!(m.total_iters, 60);
+        assert_eq!(m.iters_hist.count(), 3);
+        assert_eq!(m.time_hist.count(), 3);
+    }
+
+    #[test]
+    fn residual_aggregation_tracks_worst_and_mean() {
+        let mut m = RunMetrics::default();
+        for rel in [1e-9, 5e-9, 2e-10] {
+            let mut s = stat(5, 0.1, StopReason::Converged);
+            s.rel_residual = rel;
+            m.absorb(&s);
+        }
+        // A non-finite residual must not poison the aggregate.
+        let mut bad = stat(5, 0.1, StopReason::Breakdown);
+        bad.rel_residual = f64::NAN;
+        m.absorb(&bad);
+        assert!((m.rel_residual_worst - 5e-9).abs() < 1e-24);
+        assert!((m.mean_rel_residual() - (1e-9 + 5e-9 + 2e-10) / 4.0).abs() < 1e-24);
+    }
+
+    #[test]
+    fn merge_combines_residuals_and_backpressure() {
+        let mut a = RunMetrics::default();
+        let mut s = stat(5, 0.1, StopReason::Converged);
+        s.rel_residual = 1e-9;
+        a.absorb(&s);
+        a.backpressure_seconds = 0.5;
+        a.record_delta(0.25);
+
+        let mut b = RunMetrics::default();
+        let mut s2 = stat(7, 0.2, StopReason::Converged);
+        s2.rel_residual = 3e-9;
+        b.absorb(&s2);
+        b.backpressure_seconds = 0.25;
+        b.record_delta(0.85);
+
+        a.merge(&b);
+        assert!((a.rel_residual_worst - 3e-9).abs() < 1e-24);
+        assert!((a.backpressure_seconds - 0.75).abs() < 1e-15);
+        assert_eq!(a.delta_hist.count(), 2);
+    }
+
+    #[test]
+    fn prometheus_snapshot_contains_all_series() {
+        let mut m = RunMetrics::default();
+        m.absorb(&stat(42, 0.5, StopReason::Converged));
+        m.backpressure_seconds = 0.125;
+        m.record_delta(0.5);
+        let text = m.prometheus_text();
+        for series in [
+            "skr_systems_total 1",
+            "skr_iters_total 42",
+            "skr_backpressure_seconds_total 0.125",
+            "skr_solve_iters_bucket",
+            "skr_solve_seconds_bucket",
+            "skr_delta_bucket",
+            "skr_rel_residual_worst",
+        ] {
+            assert!(text.contains(series), "missing {series} in:\n{text}");
+        }
     }
 }

@@ -12,5 +12,5 @@ pub mod scheduler;
 pub mod sorter;
 
 pub use config::PipelineConfig;
-pub use pipeline::{Pipeline, PipelineResult};
+pub use pipeline::{Pipeline, PipelineResult, WorkerReport};
 pub use sorter::SortStrategy;

@@ -9,6 +9,13 @@
 //!    streams `(id, input, solution)` to the writer through a bounded
 //!    channel — backpressure throttles the solvers if the writer lags.
 //! 5. **Assemble** — `.npy` dataset + metrics.
+//!
+//! Observability: every stage is timed as a [`Recorder`] span on one shared
+//! timeline (`gen`, `sort`, `shard`, `solve`, `solve/w{i}`,
+//! `solve/w{i}/sys{id}`); when `cfg.trace_out` is set the run additionally
+//! streams a JSONL event trace ([`TraceSink`]) with per-cycle residuals from
+//! a [`RecordingObserver`] threaded into the solvers. With tracing off the
+//! plain `gmres`/`gcrodr` entry points run — bit-identical numerics.
 
 use super::config::PipelineConfig;
 use super::dataset::{DatasetSummary, DatasetWriter};
@@ -16,12 +23,39 @@ use super::delta::{delta_between, DeltaTracker};
 use super::metrics::RunMetrics;
 use super::scheduler::shard;
 use super::sorter::sort_order;
+use crate::obs::{Progress, Recorder, RecordingObserver, SpanRecord, TraceSink};
 use crate::pde::ProblemFamily;
-use crate::solver::{gcrodr, gmres, Engine, Recycler, SolveStats};
+use crate::solver::{
+    gcrodr, gcrodr_observed, gmres, gmres_observed, Engine, Recycler, SolveStats, StopReason,
+};
+use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::util::timer::Timer;
 use anyhow::{Context, Result};
 use std::sync::mpsc::sync_channel;
+
+/// Per-worker utilization rollup for one pipeline run.
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub systems: usize,
+    /// Seconds spent inside solver calls.
+    pub busy_seconds: f64,
+    /// Worker thread lifetime in seconds.
+    pub wall_seconds: f64,
+    /// Seconds blocked in the bounded writer channel (`tx.send`).
+    pub backpressure_seconds: f64,
+}
+
+impl WorkerReport {
+    pub fn utilization(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.busy_seconds / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+}
 
 /// Outcome of a pipeline run.
 pub struct PipelineResult {
@@ -33,6 +67,9 @@ pub struct PipelineResult {
     pub dataset: Option<DatasetSummary>,
     /// The solve order that was used.
     pub order: Vec<usize>,
+    /// Stage/worker/system spans on one shared timeline.
+    pub spans: Vec<SpanRecord>,
+    pub workers: Vec<WorkerReport>,
 }
 
 /// The pipeline entry point.
@@ -68,21 +105,42 @@ impl Pipeline {
         let wall = Timer::start();
         let cfg = &self.cfg;
         let master = Rng::new(cfg.seed);
+        let recorder = Recorder::new();
+        let sink = match &cfg.trace_out {
+            Some(path) => Some(TraceSink::create(path)?),
+            None => None,
+        };
+        if let Some(sink) = &sink {
+            sink.emit(&Json::obj(vec![
+                ("ev", Json::Str("meta".into())),
+                ("family", Json::Str(self.family.name().into())),
+                ("engine", Json::Str(cfg.engine.label().into())),
+                ("count", Json::Num(cfg.count as f64)),
+                ("n", Json::Num(cfg.unknowns as f64)),
+                ("threads", Json::Num(cfg.threads as f64)),
+                ("tol", Json::Num(cfg.solver.tol)),
+                ("seed", Json::Num(cfg.seed as f64)),
+            ]));
+        }
 
         // 1. Parameter pass.
-        let gen_t = Timer::start();
+        let gen_start = recorder.now();
         let params: Vec<Vec<f64>> = (0..cfg.count)
             .map(|i| self.family.sample_params(i, &mut master.split(i as u64)))
             .collect::<Result<_>>()?;
-        let gen_seconds = gen_t.secs();
+        let gen_seconds = recorder.now() - gen_start;
+        recorder.record("gen", None, gen_start, gen_seconds);
 
         // 2. Sort.
-        let sort_t = Timer::start();
+        let sort_start = recorder.now();
         let order = sort_order(&params, cfg.sort, cfg.seed ^ 0x5EED);
-        let sort_seconds = sort_t.secs();
+        let sort_seconds = recorder.now() - sort_start;
+        recorder.record("sort", None, sort_start, sort_seconds);
 
         // 3. Shard.
+        let shard_start = recorder.now();
         let shards = shard(&order, cfg.threads);
+        recorder.record("shard", None, shard_start, recorder.now() - shard_start);
 
         // 4. Solve (+ stream to writer).
         let input_dim = params.first().map_or(0, |p| p.len());
@@ -94,15 +152,30 @@ impl Pipeline {
         let (tx, rx) = sync_channel::<(usize, Vec<f64>, Vec<f64>)>(cfg.queue_depth);
         let export = writer.is_some();
         let family = self.family.as_ref();
+        let progress = Progress::new(cfg.count, cfg.progress);
+        let sink_ref = sink.as_ref();
 
         let mut worker_outputs: Vec<WorkerOutput> = Vec::new();
-        crossbeam_utils::thread::scope(|scope| -> Result<()> {
+        let solve_start = recorder.now();
+        std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
-            for batch in &shards {
+            for (w, batch) in shards.iter().enumerate() {
                 let tx = tx.clone();
                 let master = master.clone();
-                handles.push(scope.spawn(move |_| -> Result<WorkerOutput> {
-                    solve_batch(family, cfg, batch, &master, export.then_some(tx))
+                let recorder = &recorder;
+                let progress = &progress;
+                handles.push(scope.spawn(move || -> Result<WorkerOutput> {
+                    solve_batch(
+                        family,
+                        cfg,
+                        w,
+                        batch,
+                        &master,
+                        export.then_some(tx),
+                        sink_ref,
+                        progress,
+                        recorder,
+                    )
                 }));
             }
             drop(tx);
@@ -118,34 +191,76 @@ impl Pipeline {
                 worker_outputs.push(h.join().expect("worker panicked")?);
             }
             Ok(())
-        })
-        .expect("thread scope")?;
+        })?;
+        recorder.record("solve", None, solve_start, recorder.now() - solve_start);
+        progress.finish();
 
         // 5. Assemble.
         let mut metrics = RunMetrics::default();
         let mut per_system = Vec::with_capacity(cfg.count);
         let mut delta = DeltaTracker::default();
+        let mut workers = Vec::with_capacity(worker_outputs.len());
         for out in worker_outputs {
             for (id, s) in out.stats {
                 metrics.absorb(&s);
                 per_system.push((id, s));
             }
             for d in out.deltas {
+                metrics.record_delta(d.max);
                 delta.record(d);
             }
+            metrics.backpressure_seconds += out.backpressure_seconds;
+            workers.push(WorkerReport {
+                worker: out.worker,
+                systems: out.systems,
+                busy_seconds: out.busy_seconds,
+                wall_seconds: out.wall_seconds,
+                backpressure_seconds: out.backpressure_seconds,
+            });
         }
+        workers.sort_by_key(|w| w.worker);
         metrics.gen_seconds = gen_seconds;
         metrics.sort_seconds = sort_seconds;
         metrics.wall_seconds = wall.secs();
+        let spans = recorder.spans();
+
+        if let Some(sink) = &sink {
+            for w in &workers {
+                sink.emit(&TraceSink::worker_event(
+                    w.worker,
+                    w.systems,
+                    w.busy_seconds,
+                    w.wall_seconds,
+                    w.backpressure_seconds,
+                ));
+            }
+            for sp in &spans {
+                sink.emit(&TraceSink::span_event(sp));
+            }
+            sink.emit(&Json::obj(vec![
+                ("ev", Json::Str("run".into())),
+                ("systems", Json::Num(metrics.systems as f64)),
+                ("total_iters", Json::Num(metrics.total_iters as f64)),
+                ("solve_seconds", Json::Num(metrics.solve_seconds)),
+                ("max_iter_hits", Json::Num(metrics.max_iter_hits as f64)),
+                ("breakdowns", Json::Num(metrics.breakdowns as f64)),
+                ("gen_seconds", Json::Num(metrics.gen_seconds)),
+                ("sort_seconds", Json::Num(metrics.sort_seconds)),
+                ("wall_seconds", Json::Num(metrics.wall_seconds)),
+                ("rel_residual_worst", Json::Num(metrics.rel_residual_worst)),
+                ("backpressure_seconds", Json::Num(metrics.backpressure_seconds)),
+            ]));
+            sink.flush();
+        }
 
         let dataset = match writer {
             Some(w) => Some(
                 w.finalize(
                     self.family.name(),
                     vec![
-                        ("engine", crate::util::json::Json::Str(cfg.engine.label().into())),
-                        ("tol", crate::util::json::Json::Num(cfg.solver.tol)),
-                        ("seed", crate::util::json::Json::Num(cfg.seed as f64)),
+                        ("engine", Json::Str(cfg.engine.label().into())),
+                        ("tol", Json::Num(cfg.solver.tol)),
+                        ("seed", Json::Num(cfg.seed as f64)),
                     ],
                 )
                 .context("finalizing dataset")?,
@@ -153,35 +268,90 @@ impl Pipeline {
             None => None,
         };
 
-        Ok(PipelineResult { metrics, per_system, delta, dataset, order })
+        Ok(PipelineResult { metrics, per_system, delta, dataset, order, spans, workers })
     }
 }
 
 struct WorkerOutput {
+    worker: usize,
+    systems: usize,
     stats: Vec<(usize, SolveStats)>,
     deltas: Vec<super::delta::Delta>,
+    busy_seconds: f64,
+    wall_seconds: f64,
+    backpressure_seconds: f64,
 }
 
 /// Solve one contiguous batch sequentially, recycling across its systems.
+///
+/// When `sink` is set, solves run through the observed entry points with a
+/// [`RecordingObserver`] and the buffered events stream out as JSONL;
+/// otherwise the plain entry points run (identical numerics, zero tracing
+/// overhead).
+#[allow(clippy::too_many_arguments)]
 fn solve_batch(
     family: &dyn ProblemFamily,
     cfg: &PipelineConfig,
+    worker: usize,
     batch: &[usize],
     master: &Rng,
     tx: Option<std::sync::mpsc::SyncSender<(usize, Vec<f64>, Vec<f64>)>>,
+    sink: Option<&TraceSink>,
+    progress: &Progress,
+    recorder: &Recorder,
 ) -> Result<WorkerOutput> {
+    let worker_start = recorder.now();
     let mut rec = Recycler::new();
     let mut stats = Vec::with_capacity(batch.len());
     let mut deltas = Vec::new();
     let mut prev_space: Option<Vec<Vec<f64>>> = None;
+    let mut busy_seconds = 0.0;
+    let mut backpressure_seconds = 0.0;
     for &id in batch {
         let sys = family.sample(id, &mut master.split(id as u64))?;
         let p = cfg.precond.build(&sys.a)?;
         let mut x = vec![0.0; sys.b.len()];
-        let s = match cfg.engine {
-            Engine::Gmres => gmres(&sys.a, &sys.b, &mut x, p.as_ref(), &cfg.solver),
-            Engine::SkrRecycle => gcrodr(&sys.a, &sys.b, &mut x, p.as_ref(), &cfg.solver, &mut rec),
+        let sys_start = recorder.now();
+        let s = if let Some(sink) = sink {
+            let mut obs = RecordingObserver::new();
+            let s = match cfg.engine {
+                Engine::Gmres => {
+                    gmres_observed(&sys.a, &sys.b, &mut x, p.as_ref(), &cfg.solver, &mut obs)
+                }
+                Engine::SkrRecycle => gcrodr_observed(
+                    &sys.a,
+                    &sys.b,
+                    &mut x,
+                    p.as_ref(),
+                    &cfg.solver,
+                    &mut rec,
+                    &mut obs,
+                ),
+            };
+            sink.emit_all(&TraceSink::solve_events(
+                id,
+                worker,
+                cfg.engine.label(),
+                sys.b.len(),
+                &s,
+                &obs.events,
+            ));
+            s
+        } else {
+            match cfg.engine {
+                Engine::Gmres => gmres(&sys.a, &sys.b, &mut x, p.as_ref(), &cfg.solver),
+                Engine::SkrRecycle => {
+                    gcrodr(&sys.a, &sys.b, &mut x, p.as_ref(), &cfg.solver, &mut rec)
+                }
+            }
         };
+        recorder.record(
+            &format!("solve/w{worker}/sys{id}"),
+            Some(worker),
+            sys_start,
+            recorder.now() - sys_start,
+        );
+        busy_seconds += s.seconds;
         if cfg.instrument_delta {
             if let (Some(prev), Some(cur)) = (&prev_space, &rec.ytilde) {
                 if let Some(d) = delta_between(prev, cur) {
@@ -192,20 +362,44 @@ fn solve_batch(
         }
         if let Some(tx) = &tx {
             // Blocking send — backpressure when the writer is saturated.
+            let send_start = recorder.now();
             tx.send((id, family.input_field(&sys), x))
                 .map_err(|_| anyhow::anyhow!("writer hung up"))?;
+            backpressure_seconds += recorder.now() - send_start;
         }
+        progress.tick(s.iters, matches!(s.stop, StopReason::MaxIters));
         stats.push((id, s));
     }
-    Ok(WorkerOutput { stats, deltas })
+    let wall_seconds = recorder.now() - worker_start;
+    recorder.record(&format!("solve/w{worker}"), Some(worker), worker_start, wall_seconds);
+    Ok(WorkerOutput {
+        worker,
+        systems: batch.len(),
+        stats,
+        deltas,
+        busy_seconds,
+        wall_seconds,
+        backpressure_seconds,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::sorter::SortStrategy;
+    use crate::obs::TraceReport;
     use crate::pde::FamilyKind;
     use crate::precond::PrecondKind;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Unique per-test scratch path: pid + global counter, so concurrently
+    /// running tests (and stale files from killed runs) never collide.
+    fn unique_path(tag: &str) -> PathBuf {
+        static COUNTER: AtomicUsize = AtomicUsize::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("skr_{tag}_{}_{n}", std::process::id()))
+    }
 
     fn small_cfg() -> PipelineConfig {
         PipelineConfig {
@@ -229,12 +423,22 @@ mod tests {
         assert_eq!(r.per_system.len(), 12);
         assert_eq!(r.metrics.max_iter_hits, 0);
         assert!(r.metrics.mean_iters() > 0.0);
+        // Stage + worker + per-system spans always land on the timeline.
+        let names: Vec<&str> = r.spans.iter().map(|s| s.name.as_str()).collect();
+        for stage in ["gen", "sort", "shard", "solve"] {
+            assert!(names.contains(&stage), "missing {stage} span in {names:?}");
+        }
+        assert_eq!(r.spans.iter().filter(|s| s.depth() == 2).count(), 12);
+        assert_eq!(r.workers.len(), 2);
+        assert_eq!(r.workers.iter().map(|w| w.systems).sum::<usize>(), 12);
+        for w in &r.workers {
+            assert!(w.utilization() > 0.0 && w.utilization() <= 1.0 + 1e-9, "{w:?}");
+        }
     }
 
     #[test]
     fn exports_complete_dataset() {
-        let dir = std::env::temp_dir().join("skr_pipe_ds");
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = unique_path("pipe_ds");
         let mut cfg = small_cfg();
         cfg.out_dir = Some(dir.clone());
         let r = Pipeline::new(cfg).run().unwrap();
@@ -245,6 +449,7 @@ mod tests {
         assert_eq!(sols.shape, vec![12, 100]);
         // Solutions should be nontrivial.
         assert!(sols.data.iter().any(|&v| v.abs() > 1e-12));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -280,14 +485,14 @@ mod tests {
             assert!((0.0..=1.0 + 1e-9).contains(&d.mean), "{d:?}");
             assert!(d.mean <= d.max + 1e-9, "{d:?}");
         }
+        // δ values flow into the metrics histogram as well.
+        assert_eq!(r.metrics.delta_hist.count(), r.delta.count());
     }
 
     #[test]
     fn multithreaded_matches_singlethreaded_solutions() {
-        let dir1 = std::env::temp_dir().join("skr_pipe_t1");
-        let dir2 = std::env::temp_dir().join("skr_pipe_t4");
-        let _ = std::fs::remove_dir_all(&dir1);
-        let _ = std::fs::remove_dir_all(&dir2);
+        let dir1 = unique_path("pipe_t1");
+        let dir2 = unique_path("pipe_t4");
         let mut cfg = small_cfg();
         cfg.solver.tol = 1e-10;
         cfg.threads = 1;
@@ -302,5 +507,80 @@ mod tests {
         for (a, b) in s1.data.iter().zip(&s2.data) {
             assert!((a - b).abs() < 1e-6 * (1.0 + a.abs()), "{a} vs {b}");
         }
+        let _ = std::fs::remove_dir_all(&dir1);
+        let _ = std::fs::remove_dir_all(&dir2);
+    }
+
+    #[test]
+    fn trace_jsonl_is_valid_and_reproduces_metrics() {
+        let dir = unique_path("pipe_trace_ds");
+        let trace = unique_path("pipe_trace").with_extension("jsonl");
+        let mut cfg = small_cfg();
+        cfg.out_dir = Some(dir.clone());
+        cfg.trace_out = Some(trace.clone());
+        let r = Pipeline::new(cfg).run().unwrap();
+
+        // Every line must parse as a standalone JSON object with an "ev" tag.
+        let text = std::fs::read_to_string(&trace).unwrap();
+        let mut ev_counts = std::collections::BTreeMap::<String, usize>::new();
+        for line in text.lines() {
+            let ev = Json::parse(line).unwrap_or_else(|e| panic!("bad line {line:?}: {e}"));
+            let tag = ev.get("ev").and_then(|t| t.as_str()).expect("missing ev tag").to_string();
+            *ev_counts.entry(tag).or_insert(0) += 1;
+        }
+        assert_eq!(ev_counts.get("meta"), Some(&1));
+        assert_eq!(ev_counts.get("run"), Some(&1));
+        assert_eq!(ev_counts.get("solve"), Some(&12));
+        assert_eq!(ev_counts.get("worker"), Some(&2));
+        assert!(ev_counts.get("cycle").copied().unwrap_or(0) > 0, "{ev_counts:?}");
+        assert!(ev_counts.get("recycle").copied().unwrap_or(0) > 0, "{ev_counts:?}");
+        assert!(ev_counts.get("span").copied().unwrap_or(0) >= 4 + 2 + 12, "{ev_counts:?}");
+
+        // `skr report` aggregation reproduces RunMetrics from the trace.
+        let rep = TraceReport::from_file(&trace).unwrap();
+        assert_eq!(rep.systems, r.metrics.systems);
+        assert_eq!(rep.total_iters, r.metrics.total_iters);
+        assert_eq!(rep.max_iter_hits, r.metrics.max_iter_hits);
+        assert!((rep.mean_iters() - r.metrics.mean_iters()).abs() < 1e-9);
+        assert!(
+            (rep.mean_time() - r.metrics.mean_time()).abs() < 1e-9 * (1.0 + r.metrics.mean_time())
+        );
+        assert!((rep.rel_residual_worst - r.metrics.rel_residual_worst).abs() < 1e-20);
+        assert!(
+            (rep.backpressure_seconds() - r.metrics.backpressure_seconds).abs() < 1e-9,
+            "{} vs {}",
+            rep.backpressure_seconds(),
+            r.metrics.backpressure_seconds
+        );
+        assert_eq!(rep.per_worker.len(), 2);
+        for stage in ["gen", "sort", "shard", "solve"] {
+            assert!(rep.stages.contains_key(stage), "missing stage {stage}: {:?}", rep.stages);
+        }
+        assert_eq!(rep.engines, vec!["SKR".to_string()]);
+
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_file(&trace);
+    }
+
+    #[test]
+    fn tracing_does_not_change_iteration_counts() {
+        let mut cfg = small_cfg();
+        cfg.threads = 1;
+        let plain = Pipeline::new(cfg.clone()).run().unwrap();
+        let trace = unique_path("pipe_bitident").with_extension("jsonl");
+        cfg.trace_out = Some(trace.clone());
+        let traced = Pipeline::new(cfg).run().unwrap();
+        assert_eq!(plain.per_system.len(), traced.per_system.len());
+        for ((id_a, a), (id_b, b)) in plain.per_system.iter().zip(&traced.per_system) {
+            assert_eq!(id_a, id_b);
+            assert_eq!(a.iters, b.iters, "sys {id_a}: tracing changed the iteration count");
+            assert_eq!(a.stop, b.stop);
+            assert_eq!(
+                a.rel_residual.to_bits(),
+                b.rel_residual.to_bits(),
+                "sys {id_a}: tracing changed the residual"
+            );
+        }
+        let _ = std::fs::remove_file(&trace);
     }
 }

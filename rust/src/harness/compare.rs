@@ -9,17 +9,30 @@ use crate::solver::Engine;
 use crate::util::args::Args;
 use anyhow::Result;
 
+/// Derive a per-engine trace path: `t.jsonl` → `t.gmres.jsonl` (the two
+/// engines of a compare run must not clobber one file).
+fn engine_trace_path(base: &std::path::Path, tag: &str) -> std::path::PathBuf {
+    let stem = base.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    let name = match base.extension().and_then(|s| s.to_str()) {
+        Some(ext) => format!("{stem}.{tag}.{ext}"),
+        None => format!("{stem}.{tag}"),
+    };
+    base.with_file_name(name)
+}
+
 /// Run one configuration under both engines; returns (gmres, skr) metrics.
 pub fn run_pair(base: &PipelineConfig) -> Result<(RunMetrics, RunMetrics)> {
     let mut gm_cfg = base.clone();
     gm_cfg.engine = Engine::Gmres;
     gm_cfg.sort = SortStrategy::None; // the baseline solves in stream order
     gm_cfg.out_dir = None;
+    gm_cfg.trace_out = base.trace_out.as_ref().map(|p| engine_trace_path(p, "gmres"));
     let gm = Pipeline::new(gm_cfg).run()?.metrics;
 
     let mut skr_cfg = base.clone();
     skr_cfg.engine = Engine::SkrRecycle;
     skr_cfg.out_dir = None;
+    skr_cfg.trace_out = base.trace_out.as_ref().map(|p| engine_trace_path(p, "skr"));
     let skr = Pipeline::new(skr_cfg).run()?.metrics;
     Ok((gm, skr))
 }
@@ -52,5 +65,26 @@ pub fn run(args: &Args) -> Result<()> {
         skr.max_iter_hits
     );
     println!("speedup (GMRES/SKR): time {:.2}x  iters {:.2}x", sp.time, sp.iters);
+    if let Some(trace) = &cfg.trace_out {
+        println!(
+            "traces: {}  {}",
+            engine_trace_path(trace, "gmres").display(),
+            engine_trace_path(trace, "skr").display()
+        );
+    }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_engine_trace_paths_do_not_collide() {
+        let p = std::path::Path::new("results/t.jsonl");
+        assert_eq!(engine_trace_path(p, "gmres"), std::path::Path::new("results/t.gmres.jsonl"));
+        assert_eq!(engine_trace_path(p, "skr"), std::path::Path::new("results/t.skr.jsonl"));
+        let bare = std::path::Path::new("trace");
+        assert_eq!(engine_trace_path(bare, "skr"), std::path::Path::new("trace.skr"));
+    }
 }

@@ -12,6 +12,7 @@
 use super::results_dir;
 use crate::coordinator::sorter::{dist2, sort_order, SortStrategy};
 use crate::coordinator::{Pipeline, PipelineConfig};
+use crate::obs::TraceReport;
 use crate::pde::{generate, FamilyKind};
 use crate::precond::PrecondKind;
 use crate::solver::{solve_sequence, Engine, SolverConfig};
@@ -176,9 +177,14 @@ pub fn fig_sortpairs(n: usize, count: usize, seed: u64) -> Result<()> {
 }
 
 /// Figs 11/12: accuracy-vs-cost curves per preconditioner + slope fits.
+///
+/// The series are read back from each run's JSONL trace (`skr report`'s
+/// aggregation path) rather than the in-memory metrics — the figure data
+/// and the trace tooling can never drift apart.
 pub fn fig_11_12(n: usize, count: usize, seed: u64) -> Result<()> {
     let tols = [1e-2, 1e-3, 1e-4, 1e-5, 1e-6, 1e-7];
     let preconds = [PrecondKind::None, PrecondKind::Jacobi, PrecondKind::Sor, PrecondKind::Ilu];
+    let trace_path = results_dir().join("fig11_12_trace.jsonl");
     let mut t = Table::new(
         "Figs 11/12 — Helmholtz accuracy vs mean cost",
         &["precond", "engine", "tol", "mean_seconds", "mean_iters"],
@@ -205,15 +211,17 @@ pub fn fig_11_12(n: usize, count: usize, seed: u64) -> Result<()> {
                 };
                 cfg.solver.tol = tol;
                 cfg.seed = seed;
-                let r = Pipeline::new(cfg).run()?;
-                times.push(r.metrics.mean_time());
-                iters.push(r.metrics.mean_iters());
+                cfg.trace_out = Some(trace_path.clone());
+                Pipeline::new(cfg).run()?;
+                let rep = TraceReport::from_file(&trace_path)?;
+                times.push(rep.mean_time());
+                iters.push(rep.mean_iters());
                 t.row(vec![
                     precond.label().into(),
                     engine.label().into(),
                     format!("{tol:.0e}"),
-                    format!("{:.4}", r.metrics.mean_time()),
-                    format!("{:.1}", r.metrics.mean_iters()),
+                    format!("{:.4}", rep.mean_time()),
+                    format!("{:.1}", rep.mean_iters()),
                 ]);
             }
             // Slope of log10(accuracy) against cost over the 3 tightest tols
@@ -235,6 +243,7 @@ pub fn fig_11_12(n: usize, count: usize, seed: u64) -> Result<()> {
             );
         }
     }
+    let _ = std::fs::remove_file(&trace_path);
     t.write_csv(&results_dir().join("fig11_12_curves.csv"))?;
     slopes.write_csv(&results_dir().join("fig11_12_slopes.csv"))?;
     print!("{}", slopes.render());

@@ -24,10 +24,15 @@
 //! * [`pde`] — the four paper problem families (Darcy / Thermal / Poisson / Helmholtz),
 //! * [`no::trainer`] — train the FNO on a generated dataset through the PJRT runtime.
 
+// Configs are deliberately built as `let mut cfg = ..default(); cfg.x = ..`
+// field-by-field (mirrors how the CLI layers flags onto defaults).
+#![allow(clippy::field_reassign_with_default)]
+
 pub mod coordinator;
 pub mod harness;
 pub mod la;
 pub mod no;
+pub mod obs;
 pub mod pde;
 pub mod precond;
 pub mod runtime;

@@ -10,6 +10,7 @@
 //! * `parallel`  — reproduce Tables 31/32 (threaded/block variants)
 //! * `train`     — train the FNO on a generated dataset via the PJRT runtime
 //! * `validate`  — reproduce Table 33 (dataset-validity experiment)
+//! * `report`    — aggregate a `--trace-out` JSONL trace into a summary
 
 use skr::coordinator::{Pipeline, PipelineConfig};
 use skr::harness;
@@ -28,6 +29,7 @@ fn main() {
         "parallel" => harness::parallel::run(&args),
         "train" => harness::train::run(&args),
         "validate" => harness::validate::run(&args),
+        "report" => skr::obs::report::run(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -74,11 +76,29 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
         m.mean_iters(),
         m.wall_seconds
     );
+    println!(
+        "residual: worst {:.3e}  mean {:.3e}",
+        m.rel_residual_worst,
+        m.mean_rel_residual()
+    );
     if m.max_iter_hits > 0 {
         println!("WARNING: {} systems hit the iteration cap", m.max_iter_hits);
     }
+    if m.breakdowns > 0 {
+        println!("WARNING: {} systems ended in breakdown", m.breakdowns);
+    }
     if let Some(ds) = &r.dataset {
         println!("dataset: {} ({} samples)", ds.dir.display(), ds.count);
+    }
+    if let Some(trace) = &pipe.config().trace_out {
+        println!("trace: {} (inspect with `skr report {}`)", trace.display(), trace.display());
+    }
+    if pipe.config().strict && (m.max_iter_hits > 0 || m.breakdowns > 0) {
+        anyhow::bail!(
+            "--strict: {} max-iter hits, {} breakdowns",
+            m.max_iter_hits,
+            m.breakdowns
+        );
     }
     Ok(())
 }
@@ -95,7 +115,13 @@ COMMANDS
              --engine skr|gmres --precond none|jacobi|bjacobi|sor|asm|icc|ilu
              --sort greedy|none|grouped|hilbert|shuffle --tol 1e-8
              --threads 1 --out DIR --seed 0
-  compare    SKR vs GMRES quick speedup readout (same flags)
+             --trace-out t.jsonl  write a JSONL event trace (spans, per-system
+                                  solves, per-cycle residuals, worker rollups)
+             --progress           live progress line (systems/sec, ETA) on stderr
+             --strict             exit nonzero if any system hit the iteration
+                                  cap or broke down
+  compare    SKR vs GMRES quick speedup readout (same flags; --trace-out P
+             writes per-engine traces P.gmres.jsonl / P.skr.jsonl)
   table1     paper Table 1 (headline speedups)         [--full]
   tables     paper Tables 3..30 sweeps                 [--family F] [--full]
   ablation   paper Table 2 (sort ablation + delta)     [--full]
@@ -103,6 +129,9 @@ COMMANDS
   parallel   paper Tables 31/32 (parallel + block)     [--threads N]
   train      train the FNO on a dataset via PJRT       --data DIR [--steps N]
   validate   paper Table 33 (dataset validity)         [--full]
+  report     aggregate a trace: skr report t.jsonl [--prometheus]
+             (percentile solve times, iteration histogram, per-worker
+             timeline/utilization, backpressure totals)
 "
     );
 }

@@ -1,0 +1,197 @@
+//! Fixed-bucket histograms with Prometheus text exposition.
+//!
+//! Buckets are upper-bound inclusive (`v <= bound`), with an implicit +Inf
+//! overflow bucket — exactly Prometheus `le` semantics, so the text
+//! snapshot is scrape-compatible. Bucket layouts are fixed per metric
+//! (iterations, solve seconds, δ), which makes cross-worker merges exact.
+
+use std::fmt::Write as _;
+
+/// A monotone fixed-bucket histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    /// Ascending finite upper bounds; the +Inf bucket is implicit.
+    bounds: Vec<f64>,
+    /// Per-bucket counts, `bounds.len() + 1` entries (last = overflow).
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram { bounds: bounds.to_vec(), counts: vec![0; bounds.len() + 1], sum: 0.0, count: 0 }
+    }
+
+    /// 1-2-5 decades covering iteration counts up to the paper's 10⁴ cap.
+    pub fn iters_buckets() -> Histogram {
+        Histogram::new(&[
+            1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0, 2000.0, 5000.0, 10_000.0,
+        ])
+    }
+
+    /// Log-decade buckets for per-system solve seconds (100 µs … 1000 s).
+    pub fn seconds_buckets() -> Histogram {
+        Histogram::new(&[
+            1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 3.0, 10.0, 30.0, 100.0, 300.0,
+            1000.0,
+        ])
+    }
+
+    /// Uniform buckets over [0, 1] for the δ subspace distance.
+    pub fn unit_buckets() -> Histogram {
+        Histogram::new(&[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0])
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        // partition_point: first bucket whose bound admits v.
+        let i = self.bounds.partition_point(|&b| b < v);
+        self.counts[i] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Merge a same-layout histogram (multi-worker reduction).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "histogram bucket layouts differ");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Quantile estimate from bucket counts: returns the upper bound of the
+    /// bucket containing the q-quantile (+Inf bucket reports the largest
+    /// finite bound). `q` is clamped to [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    *self.bounds.last().unwrap_or(&f64::INFINITY)
+                };
+            }
+        }
+        *self.bounds.last().unwrap_or(&f64::INFINITY)
+    }
+
+    /// Prometheus text-format exposition (cumulative `le` buckets).
+    pub fn prometheus(&self, name: &str, out: &mut String) {
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if i < self.bounds.len() {
+                let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", self.bounds[i]);
+            } else {
+                let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+            }
+        }
+        let _ = writeln!(out, "{name}_sum {}", self.sum);
+        let _ = writeln!(out, "{name}_count {}", self.count);
+    }
+
+    /// Compact ASCII rendering for terminal reports (non-empty buckets only).
+    pub fn render(&self, label: &str) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{label} (n={}, mean={:.4})", self.count, self.mean());
+        let max = self.counts.iter().copied().max().unwrap_or(0).max(1);
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+            let hi =
+                if i < self.bounds.len() { format!("{}", self.bounds[i]) } else { "inf".into() };
+            let bar = "#".repeat(((c * 40) / max).max(1) as usize);
+            let _ = writeln!(out, "  ({lo:>9.4}, {hi:>9}] {c:>7}  {bar}");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observes_into_correct_buckets() {
+        let mut h = Histogram::new(&[1.0, 10.0, 100.0]);
+        h.observe(0.5); // bucket 0 (le 1)
+        h.observe(1.0); // bucket 0 (le is inclusive)
+        h.observe(5.0); // bucket 1
+        h.observe(1000.0); // overflow
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 1006.5).abs() < 1e-12);
+        let mut text = String::new();
+        h.prometheus("skr_test", &mut text);
+        assert!(text.contains("skr_test_bucket{le=\"1\"} 2"));
+        assert!(text.contains("skr_test_bucket{le=\"10\"} 3"));
+        assert!(text.contains("skr_test_bucket{le=\"100\"} 3"));
+        assert!(text.contains("skr_test_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("skr_test_count 4"));
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = Histogram::iters_buckets();
+        let mut b = Histogram::iters_buckets();
+        a.observe(3.0);
+        b.observe(30.0);
+        b.observe(3000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.sum() - 3033.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_bracket_the_data() {
+        let mut h = Histogram::seconds_buckets();
+        for _ in 0..90 {
+            h.observe(0.002);
+        }
+        for _ in 0..10 {
+            h.observe(0.5);
+        }
+        // p50 lands in the 3e-3 bucket, p99 in the 1.0 bucket.
+        assert!((h.quantile(0.5) - 3e-3).abs() < 1e-12);
+        assert!((h.quantile(0.99) - 1.0).abs() < 1e-12);
+        assert!(h.quantile(0.0) > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_harmless() {
+        let h = Histogram::unit_buckets();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        let mut s = String::new();
+        h.prometheus("skr_delta", &mut s);
+        assert!(s.contains("skr_delta_count 0"));
+    }
+}

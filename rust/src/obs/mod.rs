@@ -1,0 +1,30 @@
+//! Observability layer — structured tracing and metrics for the pipeline
+//! and the solvers, in the repo's std-only style (no external deps):
+//!
+//! * [`span`] — a lightweight hierarchical [`Recorder`]/[`Span`] API that
+//!   times pipeline stages (gen → sort → shard → per-worker → per-system).
+//! * [`observe`] — the [`SolveObserver`] trait threaded through `gmres` and
+//!   `gcrodr`: iteration-level events (cycle residuals, restarts, recycle
+//!   harvests) with a zero-cost no-op default, so the solver hot loop is
+//!   untouched when tracing is off.
+//! * [`sink`] — a thread-safe JSONL event sink behind `--trace-out`.
+//! * [`hist`] — fixed-bucket [`Histogram`]s with Prometheus text output,
+//!   folded into `RunMetrics` (iterations, solve seconds, δ).
+//! * [`progress`] — the opt-in live progress line for `skr generate`.
+//! * [`report`] — the `skr report <trace.jsonl>` aggregator producing the
+//!   paper-style summary (percentile solve times, iteration histogram,
+//!   per-worker timeline, backpressure totals).
+
+pub mod hist;
+pub mod observe;
+pub mod progress;
+pub mod report;
+pub mod sink;
+pub mod span;
+
+pub use hist::Histogram;
+pub use observe::{NoopObserver, RecordingObserver, SolveEvent, SolveObserver};
+pub use progress::Progress;
+pub use report::TraceReport;
+pub use sink::TraceSink;
+pub use span::{Recorder, Span, SpanRecord};

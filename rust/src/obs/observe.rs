@@ -1,0 +1,169 @@
+//! Iteration-level solver instrumentation.
+//!
+//! [`SolveObserver`] is threaded through `gmres` and `gcrodr`; every hook
+//! has an empty default body, so the [`NoopObserver`] compiles to nothing
+//! and the solver hot loop is unchanged when tracing is off. Observers
+//! receive *copies* of solver state (iteration counts, residual norms) and
+//! can never perturb the numerics — the observer-on and observer-off paths
+//! execute bit-identical arithmetic.
+
+use crate::solver::stats::SolveStats;
+
+/// Hooks called by the Krylov solvers at cycle granularity.
+///
+/// All methods have no-op defaults; implement only what you need.
+pub trait SolveObserver {
+    /// Solve begins on an `n`-unknown system with initial relative residual
+    /// `rel`.
+    fn on_start(&mut self, n: usize, rel: f64) {
+        let _ = (n, rel);
+    }
+
+    /// A restart/deflation cycle finished: `iters` cumulative inner
+    /// iterations so far, `rel` the current relative residual estimate.
+    fn on_cycle(&mut self, iters: usize, rel: f64) {
+        let _ = (iters, rel);
+    }
+
+    /// A recycle space of dimension `k` was installed (GCRO-DR only):
+    /// either re-orthonormalized from the previous system (`reused=false`),
+    /// or carried verbatim because the operator was unchanged
+    /// (`reused=true`).
+    fn on_recycle(&mut self, k: usize, reused: bool) {
+        let _ = (k, reused);
+    }
+
+    /// A fresh recycle space of dimension `k` was harvested from this
+    /// cycle's harmonic Ritz problem.
+    fn on_harvest(&mut self, k: usize) {
+        let _ = k;
+    }
+
+    /// Solve finished; `stats` is exactly what the solver returns.
+    fn on_end(&mut self, stats: &SolveStats) {
+        let _ = stats;
+    }
+}
+
+/// The zero-cost default: every hook is the empty inherent default.
+pub struct NoopObserver;
+
+impl SolveObserver for NoopObserver {}
+
+/// One recorded solver event (the in-memory mirror of a trace line).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolveEvent {
+    Start { n: usize, rel: f64 },
+    Cycle { iters: usize, rel: f64 },
+    Recycle { k: usize, reused: bool },
+    Harvest { k: usize },
+    End { iters: usize, seconds: f64, rel_residual: f64, stop: &'static str },
+}
+
+/// Buffers every event of one solve, for forwarding to a trace sink (or
+/// asserting on in tests).
+#[derive(Default)]
+pub struct RecordingObserver {
+    pub events: Vec<SolveEvent>,
+}
+
+impl RecordingObserver {
+    pub fn new() -> RecordingObserver {
+        RecordingObserver::default()
+    }
+
+    /// Cycle events in (iters, rel) form — the Fig-1/11/12 series.
+    pub fn cycles(&self) -> Vec<(usize, f64)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                SolveEvent::Cycle { iters, rel } => Some((*iters, *rel)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Largest recycle-space dimension seen during this solve.
+    pub fn max_deflation_dim(&self) -> usize {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                SolveEvent::Recycle { k, .. } | SolveEvent::Harvest { k } => Some(*k),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+impl SolveObserver for RecordingObserver {
+    fn on_start(&mut self, n: usize, rel: f64) {
+        self.events.push(SolveEvent::Start { n, rel });
+    }
+
+    fn on_cycle(&mut self, iters: usize, rel: f64) {
+        self.events.push(SolveEvent::Cycle { iters, rel });
+    }
+
+    fn on_recycle(&mut self, k: usize, reused: bool) {
+        self.events.push(SolveEvent::Recycle { k, reused });
+    }
+
+    fn on_harvest(&mut self, k: usize) {
+        self.events.push(SolveEvent::Harvest { k });
+    }
+
+    fn on_end(&mut self, stats: &SolveStats) {
+        self.events.push(SolveEvent::End {
+            iters: stats.iters,
+            seconds: stats.seconds,
+            rel_residual: stats.rel_residual,
+            stop: stats.stop.label(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::stats::StopReason;
+
+    #[test]
+    fn recording_observer_orders_events() {
+        let mut obs = RecordingObserver::new();
+        obs.on_start(100, 1.0);
+        obs.on_recycle(5, true);
+        obs.on_cycle(30, 1e-3);
+        obs.on_harvest(4);
+        obs.on_cycle(55, 1e-9);
+        let stats = SolveStats {
+            iters: 55,
+            seconds: 0.1,
+            rel_residual: 1e-9,
+            stop: StopReason::Converged,
+            trace: vec![],
+        };
+        obs.on_end(&stats);
+        assert_eq!(obs.events.len(), 6);
+        assert_eq!(obs.cycles(), vec![(30, 1e-3), (55, 1e-9)]);
+        assert_eq!(obs.max_deflation_dim(), 5);
+        assert!(matches!(obs.events.last(), Some(SolveEvent::End { stop: "converged", .. })));
+    }
+
+    #[test]
+    fn noop_observer_accepts_all_hooks() {
+        let mut obs = NoopObserver;
+        obs.on_start(10, 1.0);
+        obs.on_cycle(1, 0.5);
+        obs.on_recycle(2, false);
+        obs.on_harvest(2);
+        let stats = SolveStats {
+            iters: 1,
+            seconds: 0.0,
+            rel_residual: 0.5,
+            stop: StopReason::MaxIters,
+            trace: vec![],
+        };
+        obs.on_end(&stats);
+    }
+}

@@ -1,0 +1,126 @@
+//! Opt-in live progress line for `skr generate`.
+//!
+//! Workers call [`Progress::tick`] after each system; the meter redraws a
+//! single stderr line (carriage return, no scroll) at most ~5×/second with
+//! systems/sec, an ETA from the current rate, and the running max-iter
+//! incidence. All state is atomic, so ticks from worker threads never
+//! block each other; redraw throttling uses a `try_lock` so contended
+//! ticks skip the draw instead of waiting.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shared progress meter (inert unless `enabled`).
+pub struct Progress {
+    total: usize,
+    done: AtomicUsize,
+    max_iter_hits: AtomicUsize,
+    total_iters: AtomicUsize,
+    epoch: Instant,
+    last_draw: Mutex<f64>,
+    enabled: bool,
+}
+
+impl Progress {
+    pub fn new(total: usize, enabled: bool) -> Progress {
+        Progress {
+            total,
+            done: AtomicUsize::new(0),
+            max_iter_hits: AtomicUsize::new(0),
+            total_iters: AtomicUsize::new(0),
+            epoch: Instant::now(),
+            last_draw: Mutex::new(0.0),
+            enabled,
+        }
+    }
+
+    /// Record one finished system (its iteration count and whether it hit
+    /// the iteration cap) and maybe redraw.
+    pub fn tick(&self, iters: usize, hit_cap: bool) {
+        let done = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+        self.total_iters.fetch_add(iters, Ordering::Relaxed);
+        if hit_cap {
+            self.max_iter_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        if !self.enabled {
+            return;
+        }
+        let now = self.epoch.elapsed().as_secs_f64();
+        // Redraw at most every 200 ms (and always for the final system).
+        if let Ok(mut last) = self.last_draw.try_lock() {
+            if done == self.total || now - *last >= 0.2 {
+                *last = now;
+                self.draw(done, now);
+            }
+        }
+    }
+
+    fn draw(&self, done: usize, now: f64) {
+        let rate = if now > 0.0 { done as f64 / now } else { 0.0 };
+        let remaining = self.total.saturating_sub(done);
+        let eta = if rate > 0.0 { remaining as f64 / rate } else { f64::NAN };
+        let hits = self.max_iter_hits.load(Ordering::Relaxed);
+        let mut err = std::io::stderr().lock();
+        let _ = write!(
+            err,
+            "\r[skr] {done}/{} systems  {rate:.1} sys/s  ETA {eta:.0}s  max-iter hits {hits}   ",
+            self.total
+        );
+        let _ = err.flush();
+    }
+
+    /// Terminate the progress line (call once after the run).
+    pub fn finish(&self) {
+        if self.enabled && self.done.load(Ordering::Relaxed) > 0 {
+            let mut err = std::io::stderr().lock();
+            let _ = writeln!(err);
+        }
+    }
+
+    pub fn done(&self) -> usize {
+        self.done.load(Ordering::Relaxed)
+    }
+
+    pub fn max_iter_hits(&self) -> usize {
+        self.max_iter_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn total_iters(&self) -> usize {
+        self.total_iters.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_without_printing_when_disabled() {
+        let p = Progress::new(5, false);
+        for i in 0..5 {
+            p.tick(10 + i, i == 3);
+        }
+        assert_eq!(p.done(), 5);
+        assert_eq!(p.max_iter_hits(), 1);
+        assert_eq!(p.total_iters(), 60);
+        p.finish();
+    }
+
+    #[test]
+    fn concurrent_ticks_are_lossless() {
+        let p = Progress::new(400, false);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        p.tick(3, false);
+                    }
+                });
+            }
+        });
+        assert_eq!(p.done(), 400);
+        assert_eq!(p.total_iters(), 1200);
+    }
+}

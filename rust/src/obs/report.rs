@@ -1,0 +1,346 @@
+//! `skr report <trace.jsonl>` — aggregate a trace into the paper's
+//! table-style summary: percentile solve times, iteration histogram,
+//! per-worker timeline/utilization, backpressure totals, stage breakdown.
+//!
+//! The aggregation is exact (it replays the per-solve events), so the mean
+//! iterations/solve seconds it prints reproduce `RunMetrics` for the run
+//! that emitted the trace.
+
+use crate::obs::hist::Histogram;
+use crate::util::args::Args;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Per-worker rollup parsed from `worker` events (or rebuilt from solves).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkerLine {
+    pub systems: usize,
+    pub busy_seconds: f64,
+    pub wall_seconds: f64,
+    pub backpressure_seconds: f64,
+}
+
+impl WorkerLine {
+    pub fn utilization(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.busy_seconds / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Everything `skr report` aggregates out of one trace file.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub systems: usize,
+    pub total_iters: usize,
+    pub solve_seconds: f64,
+    pub max_iter_hits: usize,
+    pub breakdowns: usize,
+    pub cycles: usize,
+    pub recycle_installs: usize,
+    /// Sorted per-system solve times (exact percentiles).
+    pub solve_times: Vec<f64>,
+    pub rel_residual_worst: f64,
+    pub rel_residual_sum: f64,
+    pub iters_hist: Histogram,
+    pub time_hist: Histogram,
+    pub per_worker: BTreeMap<usize, WorkerLine>,
+    /// Top-level stage name → total seconds, from `span` events.
+    pub stages: BTreeMap<String, f64>,
+    /// Engines seen in `solve` events (usually one; two for `compare`).
+    pub engines: Vec<String>,
+    pub parse_errors: usize,
+}
+
+impl Default for TraceReport {
+    fn default() -> Self {
+        TraceReport {
+            systems: 0,
+            total_iters: 0,
+            solve_seconds: 0.0,
+            max_iter_hits: 0,
+            breakdowns: 0,
+            cycles: 0,
+            recycle_installs: 0,
+            solve_times: Vec::new(),
+            rel_residual_worst: 0.0,
+            rel_residual_sum: 0.0,
+            iters_hist: Histogram::iters_buckets(),
+            time_hist: Histogram::seconds_buckets(),
+            per_worker: BTreeMap::new(),
+            stages: BTreeMap::new(),
+            engines: Vec::new(),
+            parse_errors: 0,
+        }
+    }
+}
+
+impl TraceReport {
+    pub fn from_file(path: &Path) -> Result<TraceReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Self::from_lines(text.lines())
+    }
+
+    pub fn from_lines<'a>(lines: impl Iterator<Item = &'a str>) -> Result<TraceReport> {
+        let mut r = TraceReport::default();
+        let mut saw_any = false;
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            saw_any = true;
+            let Ok(ev) = Json::parse(line) else {
+                r.parse_errors += 1;
+                continue;
+            };
+            match ev.get("ev").and_then(|e| e.as_str()) {
+                Some("solve") => r.absorb_solve(&ev),
+                Some("cycle") => r.cycles += 1,
+                Some("recycle") => r.recycle_installs += 1,
+                Some("worker") => r.absorb_worker(&ev),
+                Some("span") => r.absorb_span(&ev),
+                // meta / run / unknown events are informational only.
+                _ => {}
+            }
+        }
+        if !saw_any {
+            bail!("trace is empty");
+        }
+        r.solve_times.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        Ok(r)
+    }
+
+    fn absorb_solve(&mut self, ev: &Json) {
+        let num = |k: &str| ev.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        self.systems += 1;
+        let iters = num("iters") as usize;
+        let seconds = num("seconds");
+        self.total_iters += iters;
+        self.solve_seconds += seconds;
+        self.solve_times.push(seconds);
+        self.iters_hist.observe(iters as f64);
+        self.time_hist.observe(seconds);
+        let rel = num("rel_residual");
+        self.rel_residual_sum += rel;
+        if rel > self.rel_residual_worst {
+            self.rel_residual_worst = rel;
+        }
+        match ev.get("stop").and_then(|s| s.as_str()) {
+            Some("max_iters") => self.max_iter_hits += 1,
+            Some("breakdown") => self.breakdowns += 1,
+            _ => {}
+        }
+        if let Some(engine) = ev.get("engine").and_then(|e| e.as_str()) {
+            if !self.engines.iter().any(|e| e == engine) {
+                self.engines.push(engine.to_string());
+            }
+        }
+    }
+
+    fn absorb_worker(&mut self, ev: &Json) {
+        let num = |k: &str| ev.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let Some(w) = ev.get("worker").and_then(|v| v.as_usize()) else { return };
+        let line = self.per_worker.entry(w).or_default();
+        line.systems += num("systems") as usize;
+        line.busy_seconds += num("busy_seconds");
+        line.wall_seconds += num("wall_seconds");
+        line.backpressure_seconds += num("backpressure_seconds");
+    }
+
+    fn absorb_span(&mut self, ev: &Json) {
+        let Some(name) = ev.get("name").and_then(|v| v.as_str()) else { return };
+        // Only top-level stages go into the breakdown; nested worker and
+        // per-system spans are already rolled up by `worker` events.
+        if name.contains('/') {
+            return;
+        }
+        let secs = ev.get("seconds").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        *self.stages.entry(name.to_string()).or_insert(0.0) += secs;
+    }
+
+    pub fn mean_iters(&self) -> f64 {
+        if self.systems == 0 {
+            0.0
+        } else {
+            self.total_iters as f64 / self.systems as f64
+        }
+    }
+
+    pub fn mean_time(&self) -> f64 {
+        if self.systems == 0 {
+            0.0
+        } else {
+            self.solve_seconds / self.systems as f64
+        }
+    }
+
+    pub fn mean_rel_residual(&self) -> f64 {
+        if self.systems == 0 {
+            0.0
+        } else {
+            self.rel_residual_sum / self.systems as f64
+        }
+    }
+
+    /// Exact q-quantile of per-system solve seconds (nearest-rank).
+    pub fn time_percentile(&self, q: f64) -> f64 {
+        if self.solve_times.is_empty() {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.solve_times.len() as f64).ceil().max(1.0) as usize;
+        self.solve_times[rank.min(self.solve_times.len()) - 1]
+    }
+
+    pub fn backpressure_seconds(&self) -> f64 {
+        self.per_worker.values().map(|w| w.backpressure_seconds).sum()
+    }
+
+    /// Render the paper-style summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace: {} systems, engines [{}], {} cycle events, {} recycle installs",
+            self.systems,
+            self.engines.join(", "),
+            self.cycles,
+            self.recycle_installs
+        );
+        let _ = writeln!(
+            out,
+            "solve: mean {:.4}s / {:.1} iters per system  (p50 {:.4}s  p90 {:.4}s  p99 {:.4}s)",
+            self.mean_time(),
+            self.mean_iters(),
+            self.time_percentile(0.50),
+            self.time_percentile(0.90),
+            self.time_percentile(0.99),
+        );
+        let _ = writeln!(
+            out,
+            "residual: worst {:.3e}  mean {:.3e};  max-iter hits {}  breakdowns {}",
+            self.rel_residual_worst,
+            self.mean_rel_residual(),
+            self.max_iter_hits,
+            self.breakdowns
+        );
+        if !self.stages.is_empty() {
+            let stages: Vec<String> =
+                self.stages.iter().map(|(k, v)| format!("{k} {v:.3}s")).collect();
+            let _ = writeln!(out, "stages: {}", stages.join("  "));
+        }
+        if !self.per_worker.is_empty() {
+            let mut t = Table::new(
+                "per-worker timeline",
+                &["worker", "systems", "busy_s", "wall_s", "backpressure_s", "utilization"],
+            );
+            for (w, line) in &self.per_worker {
+                t.row(vec![
+                    w.to_string(),
+                    line.systems.to_string(),
+                    format!("{:.3}", line.busy_seconds),
+                    format!("{:.3}", line.wall_seconds),
+                    format!("{:.4}", line.backpressure_seconds),
+                    format!("{:.1}%", line.utilization() * 100.0),
+                ]);
+            }
+            let _ = write!(out, "{}", t.render());
+            let _ = writeln!(
+                out,
+                "backpressure total: {:.4}s blocked in writer channel",
+                self.backpressure_seconds()
+            );
+        }
+        let _ = write!(out, "{}", self.iters_hist.render("iterations per system"));
+        let _ = write!(out, "{}", self.time_hist.render("solve seconds per system"));
+        if self.parse_errors > 0 {
+            let _ = writeln!(out, "WARNING: {} unparseable trace lines skipped", self.parse_errors);
+        }
+        out
+    }
+}
+
+/// CLI entry: `skr report <trace.jsonl> [--prometheus]`.
+pub fn run(args: &Args) -> Result<()> {
+    let Some(path) = args.positional().first() else {
+        bail!("usage: skr report <trace.jsonl> [--prometheus]");
+    };
+    let report = TraceReport::from_file(Path::new(path))?;
+    print!("{}", report.render());
+    if args.flag("prometheus") {
+        let mut text = String::new();
+        let _ = writeln!(text, "# TYPE skr_systems_total counter");
+        let _ = writeln!(text, "skr_systems_total {}", report.systems);
+        let _ = writeln!(text, "# TYPE skr_max_iter_hits_total counter");
+        let _ = writeln!(text, "skr_max_iter_hits_total {}", report.max_iter_hits);
+        report.iters_hist.prometheus("skr_solve_iters", &mut text);
+        report.time_hist.prometheus("skr_solve_seconds", &mut text);
+        print!("{text}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_solve_and_worker_events() {
+        let lines = [
+            r#"{"ev":"meta","count":3}"#,
+            r#"{"ev":"span","name":"gen","worker":null,"start":0,"seconds":0.5}"#,
+            r#"{"ev":"span","name":"solve/w0/sys0","worker":0,"start":1,"seconds":0.1}"#,
+            r#"{"ev":"cycle","id":0,"worker":0,"iters":30,"rel":0.001}"#,
+            r#"{"ev":"recycle","id":1,"worker":0,"k":5,"reused":false}"#,
+            r#"{"ev":"solve","id":0,"worker":0,"engine":"SKR","n":100,"iters":40,"seconds":0.2,"rel_residual":1e-9,"stop":"converged","recycle_k":0}"#,
+            r#"{"ev":"solve","id":1,"worker":0,"engine":"SKR","n":100,"iters":20,"seconds":0.1,"rel_residual":2e-9,"stop":"converged","recycle_k":5}"#,
+            r#"{"ev":"solve","id":2,"worker":1,"engine":"SKR","n":100,"iters":60,"seconds":0.6,"rel_residual":5e-7,"stop":"max_iters","recycle_k":5}"#,
+            r#"{"ev":"worker","worker":0,"systems":2,"busy_seconds":0.3,"wall_seconds":0.4,"backpressure_seconds":0.05,"utilization":0.75}"#,
+            r#"{"ev":"worker","worker":1,"systems":1,"busy_seconds":0.6,"wall_seconds":0.7,"backpressure_seconds":0.01,"utilization":0.857}"#,
+        ];
+        let r = TraceReport::from_lines(lines.iter().copied()).unwrap();
+        assert_eq!(r.systems, 3);
+        assert_eq!(r.total_iters, 120);
+        assert!((r.mean_iters() - 40.0).abs() < 1e-12);
+        assert!((r.mean_time() - 0.3).abs() < 1e-12);
+        assert_eq!(r.max_iter_hits, 1);
+        assert_eq!(r.cycles, 1);
+        assert_eq!(r.recycle_installs, 1);
+        assert_eq!(r.engines, vec!["SKR".to_string()]);
+        assert!((r.rel_residual_worst - 5e-7).abs() < 1e-20);
+        // Exact percentiles over [0.1, 0.2, 0.6].
+        assert!((r.time_percentile(0.5) - 0.2).abs() < 1e-12);
+        assert!((r.time_percentile(1.0) - 0.6).abs() < 1e-12);
+        // Worker rollups.
+        assert_eq!(r.per_worker.len(), 2);
+        assert!((r.per_worker[&0].utilization() - 0.75).abs() < 1e-12);
+        assert!((r.backpressure_seconds() - 0.06).abs() < 1e-12);
+        // Only the top-level span lands in stages.
+        assert_eq!(r.stages.len(), 1);
+        assert!((r.stages["gen"] - 0.5).abs() < 1e-12);
+        // Rendering mentions the headline numbers.
+        let text = r.render();
+        assert!(text.contains("3 systems"));
+        assert!(text.contains("per-worker timeline"));
+        assert_eq!(r.parse_errors, 0);
+    }
+
+    #[test]
+    fn tolerates_garbage_lines_and_rejects_empty() {
+        let lines = [
+            "not json at all",
+            r#"{"ev":"solve","id":0,"worker":0,"engine":"GMRES","n":10,"iters":5,"seconds":0.01,"rel_residual":1e-10,"stop":"converged","recycle_k":0}"#,
+        ];
+        let r = TraceReport::from_lines(lines.iter().copied()).unwrap();
+        assert_eq!(r.systems, 1);
+        assert_eq!(r.parse_errors, 1);
+        assert!(TraceReport::from_lines([].iter().copied()).is_err());
+    }
+}

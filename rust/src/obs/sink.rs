@@ -1,0 +1,212 @@
+//! JSONL trace sink — one machine-parseable JSON object per line, shared
+//! across worker threads behind a mutex (each line is written atomically).
+//!
+//! Event vocabulary (all events carry an `"ev"` discriminant):
+//!
+//! * `meta`    — run header: engine/family labels, count, threads.
+//! * `span`    — `{name, worker, start, seconds}` pipeline stage timing.
+//! * `solve`   — per-system outcome: `{id, worker, engine, n, iters,
+//!   seconds, rel_residual, stop, recycle_k}`.
+//! * `cycle`   — per-cycle residual: `{id, worker, iters, rel}`.
+//! * `recycle` — recycle-space install/harvest: `{id, worker, k, reused}`.
+//! * `worker`  — per-worker rollup: `{worker, systems, busy_seconds,
+//!   wall_seconds, backpressure_seconds, utilization}`.
+//! * `run`     — final aggregate mirroring `RunMetrics`.
+
+use crate::obs::observe::SolveEvent;
+use crate::solver::stats::SolveStats;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Thread-safe line-oriented JSON writer.
+pub struct TraceSink {
+    w: Mutex<BufWriter<std::fs::File>>,
+}
+
+impl TraceSink {
+    /// Create (truncate) the trace file.
+    pub fn create(path: &Path) -> Result<TraceSink> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating trace dir {}", parent.display()))?;
+            }
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        Ok(TraceSink { w: Mutex::new(BufWriter::new(f)) })
+    }
+
+    /// Write one event as a single line. IO errors are deliberately
+    /// swallowed: tracing must never fail the run it observes.
+    pub fn emit(&self, ev: &Json) {
+        let mut line = ev.dump();
+        line.push('\n');
+        if let Ok(mut w) = self.w.lock() {
+            let _ = w.write_all(line.as_bytes());
+        }
+    }
+
+    /// Emit several events under one lock acquisition (keeps one system's
+    /// events contiguous in the file).
+    pub fn emit_all(&self, evs: &[Json]) {
+        if let Ok(mut w) = self.w.lock() {
+            for ev in evs {
+                let mut line = ev.dump();
+                line.push('\n');
+                let _ = w.write_all(line.as_bytes());
+            }
+        }
+    }
+
+    pub fn flush(&self) {
+        if let Ok(mut w) = self.w.lock() {
+            let _ = w.flush();
+        }
+    }
+
+    /// Build the `solve` event plus its buffered `cycle`/`recycle` events
+    /// for one system, in file order (cycles first, outcome last).
+    pub fn solve_events(
+        id: usize,
+        worker: usize,
+        engine: &str,
+        n: usize,
+        stats: &SolveStats,
+        events: &[SolveEvent],
+    ) -> Vec<Json> {
+        let mut out = Vec::with_capacity(events.len() + 1);
+        let mut recycle_k = 0usize;
+        for ev in events {
+            match ev {
+                SolveEvent::Cycle { iters, rel } => out.push(Json::obj(vec![
+                    ("ev", Json::Str("cycle".into())),
+                    ("id", Json::Num(id as f64)),
+                    ("worker", Json::Num(worker as f64)),
+                    ("iters", Json::Num(*iters as f64)),
+                    ("rel", Json::Num(*rel)),
+                ])),
+                SolveEvent::Recycle { k, reused } => {
+                    recycle_k = recycle_k.max(*k);
+                    out.push(Json::obj(vec![
+                        ("ev", Json::Str("recycle".into())),
+                        ("id", Json::Num(id as f64)),
+                        ("worker", Json::Num(worker as f64)),
+                        ("k", Json::Num(*k as f64)),
+                        ("reused", Json::Bool(*reused)),
+                    ]));
+                }
+                SolveEvent::Harvest { k } => {
+                    recycle_k = recycle_k.max(*k);
+                    out.push(Json::obj(vec![
+                        ("ev", Json::Str("recycle".into())),
+                        ("id", Json::Num(id as f64)),
+                        ("worker", Json::Num(worker as f64)),
+                        ("k", Json::Num(*k as f64)),
+                        ("reused", Json::Bool(false)),
+                    ]));
+                }
+                // Start/End are folded into the `solve` summary event.
+                SolveEvent::Start { .. } | SolveEvent::End { .. } => {}
+            }
+        }
+        out.push(Json::obj(vec![
+            ("ev", Json::Str("solve".into())),
+            ("id", Json::Num(id as f64)),
+            ("worker", Json::Num(worker as f64)),
+            ("engine", Json::Str(engine.into())),
+            ("n", Json::Num(n as f64)),
+            ("iters", Json::Num(stats.iters as f64)),
+            ("seconds", Json::Num(stats.seconds)),
+            ("rel_residual", Json::Num(stats.rel_residual)),
+            ("stop", Json::Str(stats.stop.label().into())),
+            ("recycle_k", Json::Num(recycle_k as f64)),
+        ]));
+        out
+    }
+
+    /// Build a `span` event.
+    pub fn span_event(span: &crate::obs::span::SpanRecord) -> Json {
+        Json::obj(vec![
+            ("ev", Json::Str("span".into())),
+            ("name", Json::Str(span.name.clone())),
+            (
+                "worker",
+                span.worker.map_or(Json::Null, |w| Json::Num(w as f64)),
+            ),
+            ("start", Json::Num(span.start)),
+            ("seconds", Json::Num(span.seconds)),
+        ])
+    }
+
+    /// Build a `worker` rollup event.
+    pub fn worker_event(
+        worker: usize,
+        systems: usize,
+        busy_seconds: f64,
+        wall_seconds: f64,
+        backpressure_seconds: f64,
+    ) -> Json {
+        let util = if wall_seconds > 0.0 { busy_seconds / wall_seconds } else { 0.0 };
+        Json::obj(vec![
+            ("ev", Json::Str("worker".into())),
+            ("worker", Json::Num(worker as f64)),
+            ("systems", Json::Num(systems as f64)),
+            ("busy_seconds", Json::Num(busy_seconds)),
+            ("wall_seconds", Json::Num(wall_seconds)),
+            ("backpressure_seconds", Json::Num(backpressure_seconds)),
+            ("utilization", Json::Num(util)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::stats::StopReason;
+
+    #[test]
+    fn writes_parseable_jsonl() {
+        let path = std::env::temp_dir().join(format!("skr_sink_{}.jsonl", std::process::id()));
+        let sink = TraceSink::create(&path).unwrap();
+        sink.emit(&Json::obj(vec![("ev", Json::Str("meta".into())), ("count", Json::Num(2.0))]));
+        let stats = SolveStats {
+            iters: 42,
+            seconds: 0.5,
+            rel_residual: 1e-9,
+            stop: StopReason::Converged,
+            trace: vec![],
+        };
+        let evs = TraceSink::solve_events(
+            7,
+            0,
+            "SKR",
+            100,
+            &stats,
+            &[
+                SolveEvent::Start { n: 100, rel: 1.0 },
+                SolveEvent::Recycle { k: 5, reused: true },
+                SolveEvent::Cycle { iters: 30, rel: 1e-4 },
+                SolveEvent::End { iters: 42, seconds: 0.5, rel_residual: 1e-9, stop: "converged" },
+            ],
+        );
+        sink.emit_all(&evs);
+        sink.flush();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4); // meta + recycle + cycle + solve
+        for line in &lines {
+            Json::parse(line).unwrap();
+        }
+        let solve = Json::parse(lines.last().unwrap()).unwrap();
+        assert_eq!(solve.get("ev").unwrap().as_str(), Some("solve"));
+        assert_eq!(solve.get("iters").unwrap().as_usize(), Some(42));
+        assert_eq!(solve.get("recycle_k").unwrap().as_usize(), Some(5));
+        assert_eq!(solve.get("stop").unwrap().as_str(), Some("converged"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,168 @@
+//! Hierarchical wall-clock spans for pipeline stages.
+//!
+//! A [`Recorder`] holds one monotonic epoch for the whole run; every
+//! [`SpanRecord`] stores its start offset and duration relative to that
+//! epoch, so spans from different worker threads land on one comparable
+//! timeline. Hierarchy is by `/`-separated names (`solve/w2/sys17` nests
+//! under `solve/w2` under `solve`), which keeps the API a single method
+//! instead of a tree of guards.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One completed span on the run timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    /// `/`-separated hierarchical name (e.g. `solve/w0/sys3`).
+    pub name: String,
+    /// Worker index for per-worker spans (None for pipeline-level stages).
+    pub worker: Option<usize>,
+    /// Start offset in seconds since the recorder's epoch.
+    pub start: f64,
+    /// Duration in seconds.
+    pub seconds: f64,
+}
+
+impl SpanRecord {
+    /// Depth in the span hierarchy (0 for top-level stages).
+    pub fn depth(&self) -> usize {
+        self.name.matches('/').count()
+    }
+
+    /// The first path segment (the top-level stage this span belongs to).
+    pub fn stage(&self) -> &str {
+        self.name.split('/').next().unwrap_or(&self.name)
+    }
+}
+
+/// Thread-safe collector of [`SpanRecord`]s sharing one epoch.
+pub struct Recorder {
+    epoch: Instant,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder { epoch: Instant::now(), spans: Mutex::new(Vec::new()) }
+    }
+
+    /// Seconds since the recorder's epoch (the run timeline coordinate).
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record a completed span directly (for callers that timed it
+    /// themselves via [`Recorder::now`]).
+    pub fn record(&self, name: &str, worker: Option<usize>, start: f64, seconds: f64) {
+        let rec = SpanRecord { name: name.to_string(), worker, start, seconds };
+        self.spans.lock().expect("span lock poisoned").push(rec);
+    }
+
+    /// Open a guard span: records itself on drop (or explicit [`Span::end`]).
+    pub fn span(&self, name: &str) -> Span<'_> {
+        self.span_for(name, None)
+    }
+
+    /// Open a guard span attributed to a worker thread.
+    pub fn span_for(&self, name: &str, worker: Option<usize>) -> Span<'_> {
+        Span { rec: self, name: name.to_string(), worker, start: self.now() }
+    }
+
+    /// Snapshot of everything recorded so far, sorted by start time.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        let mut v = self.spans.lock().expect("span lock poisoned").clone();
+        v.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap_or(std::cmp::Ordering::Equal));
+        v
+    }
+
+    /// Total seconds attributed to a stage (summed over matching spans at
+    /// the given exact name).
+    pub fn total(&self, name: &str) -> f64 {
+        self.spans
+            .lock()
+            .expect("span lock poisoned")
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| s.seconds)
+            .sum()
+    }
+}
+
+/// RAII guard for an open span.
+pub struct Span<'a> {
+    rec: &'a Recorder,
+    name: String,
+    worker: Option<usize>,
+    start: f64,
+}
+
+impl Span<'_> {
+    /// Close the span now (equivalent to dropping it).
+    pub fn end(self) {}
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let dur = self.rec.now() - self.start;
+        self.rec.record(&self.name, self.worker, self.start, dur);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_nested_spans_on_one_timeline() {
+        let rec = Recorder::new();
+        {
+            let _outer = rec.span("solve");
+            let inner = rec.span_for("solve/w0", Some(0));
+            inner.end();
+        }
+        let spans = rec.spans();
+        assert_eq!(spans.len(), 2);
+        // Sorted by start: outer opened first.
+        assert_eq!(spans[0].name, "solve");
+        assert_eq!(spans[1].name, "solve/w0");
+        assert_eq!(spans[1].worker, Some(0));
+        assert_eq!(spans[0].depth(), 0);
+        assert_eq!(spans[1].depth(), 1);
+        assert_eq!(spans[1].stage(), "solve");
+        // The inner span starts no earlier and ends no later than the outer.
+        assert!(spans[1].start >= spans[0].start);
+        assert!(spans[1].start + spans[1].seconds <= spans[0].start + spans[0].seconds + 1e-9);
+    }
+
+    #[test]
+    fn manual_record_and_totals() {
+        let rec = Recorder::new();
+        rec.record("gen", None, 0.0, 0.5);
+        rec.record("gen", None, 1.0, 0.25);
+        rec.record("sort", None, 2.0, 0.125);
+        assert!((rec.total("gen") - 0.75).abs() < 1e-12);
+        assert!((rec.total("sort") - 0.125).abs() < 1e-12);
+        assert_eq!(rec.total("missing"), 0.0);
+    }
+
+    #[test]
+    fn recorder_is_shareable_across_threads() {
+        let rec = Recorder::new();
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                let rec = &rec;
+                s.spawn(move || {
+                    let sp = rec.span_for(&format!("solve/w{w}"), Some(w));
+                    sp.end();
+                });
+            }
+        });
+        assert_eq!(rec.spans().len(), 4);
+    }
+}

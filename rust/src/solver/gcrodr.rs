@@ -11,6 +11,7 @@
 //! space (see DESIGN.md).
 
 use crate::la::{axpy, dot, norm2, Csr, Mat};
+use crate::obs::{NoopObserver, SolveObserver};
 use crate::precond::Preconditioner;
 use crate::solver::harmonic::{harmonic_ritz_cycle, harmonic_ritz_initial};
 use crate::solver::stats::{SolveStats, SolverConfig, StopReason};
@@ -150,6 +151,23 @@ pub fn gcrodr(
     cfg: &SolverConfig,
     rec: &mut Recycler,
 ) -> SolveStats {
+    gcrodr_observed(a, b, x, m_inv, cfg, rec, &mut NoopObserver)
+}
+
+/// [`gcrodr`] with iteration-level observability: `obs` receives cycle
+/// residuals, recycle-space installs (with their deflation dimension k and
+/// whether the reseed was skipped) and harmonic-Ritz harvests. The observer
+/// only ever reads copies of solver state, so iteration counts and the
+/// solution are bit-identical to the unobserved path.
+pub fn gcrodr_observed(
+    a: &Csr,
+    b: &[f64],
+    x: &mut [f64],
+    m_inv: &dyn Preconditioner,
+    cfg: &SolverConfig,
+    rec: &mut Recycler,
+    obs: &mut dyn SolveObserver,
+) -> SolveStats {
     let timer = Timer::start();
     let n = b.len();
     let m = cfg.m.max(2);
@@ -166,11 +184,20 @@ pub fn gcrodr(
     a.matvec_into(x, &mut w);
     axpy(-1.0, &w, &mut r);
     let mut rel = norm2(&r) / bnorm;
+    obs.on_start(n, rel);
     if cfg.record_trace {
         trace.push((0, rel));
     }
     if rel < cfg.tol {
-        return SolveStats { iters, seconds: timer.secs(), rel_residual: rel, stop: StopReason::Converged, trace };
+        let stats = SolveStats {
+            iters,
+            seconds: timer.secs(),
+            rel_residual: rel,
+            stop: StopReason::Converged,
+            trace,
+        };
+        obs.on_end(&stats);
+        return stats;
     }
 
     // (U, C) for this system.
@@ -197,6 +224,7 @@ pub fn gcrodr(
         }
         m_inv.apply(&du, &mut z);
         axpy(1.0, &z, x);
+        obs.on_recycle(k, true);
         uc = Some((u, c));
         rel = norm2(&r) / bnorm;
         rec.ytilde = None;
@@ -212,6 +240,7 @@ pub fn gcrodr(
             }
             m_inv.apply(&du, &mut z);
             axpy(1.0, &z, x);
+            obs.on_recycle(k, false);
             uc = Some((u, c));
             rel = norm2(&r) / bnorm;
         }
@@ -294,6 +323,7 @@ pub fn gcrodr(
             }
             rel = norm2(&r) / bnorm;
         }
+        obs.on_cycle(iters, rel);
         if cfg.record_trace {
             trace.push((iters, rel));
         }
@@ -331,6 +361,7 @@ pub fn gcrodr(
                             }
                         }
                     }
+                    obs.on_harvest(kk);
                     uc = Some((u_cols, c_cols));
                 }
             }
@@ -344,13 +375,15 @@ pub fn gcrodr(
             let mut sub = cfg.clone();
             sub.max_iters = cfg.max_iters - iters;
             let stats = crate::solver::gmres::gmres(a, b, x, m_inv, &sub);
-            return SolveStats {
+            let stats = SolveStats {
                 iters: iters + stats.iters,
                 seconds: timer.secs(),
                 rel_residual: stats.rel_residual,
                 stop: stats.stop,
                 trace,
             };
+            obs.on_end(&stats);
+            return stats;
         };
         let k = c.len();
         let s = m - k; // inner Arnoldi steps this cycle
@@ -477,6 +510,7 @@ pub fn gcrodr(
             axpy(-gy[k + l], vl, &mut r);
         }
         rel = norm2(&r) / bnorm;
+        obs.on_cycle(iters, rel);
         if cfg.record_trace {
             trace.push((iters, rel));
         }
@@ -534,6 +568,7 @@ pub fn gcrodr(
                             }
                         }
                     }
+                    obs.on_harvest(kk);
                     uc = Some((u_new, c_new));
                 }
             }
@@ -564,7 +599,9 @@ pub fn gcrodr(
     } else {
         StopReason::Breakdown
     };
-    SolveStats { iters, seconds: timer.secs(), rel_residual: final_rel, stop, trace }
+    let stats = SolveStats { iters, seconds: timer.secs(), rel_residual: final_rel, stop, trace };
+    obs.on_end(&stats);
+    stats
 }
 
 #[cfg(test)]
@@ -613,7 +650,7 @@ mod tests {
         let mut rec = Recycler::new();
         let mut recycled_iters = 0;
         for (a, b) in &systems {
-            let mut x = vec![0.0; *&n];
+            let mut x = vec![0.0; n];
             let s = gcrodr(a, b, &mut x, &Identity, &cfg, &mut rec);
             assert!(s.converged(), "{s:?}");
             recycled_iters += s.iters;
@@ -646,6 +683,51 @@ mod tests {
             let s = gcrodr(&a, &b, &mut x, p.as_ref(), &cfg, &mut rec);
             assert!(s.converged(), "{kind:?}: {s:?}");
             assert!(s.rel_residual < 1e-8, "{kind:?}: {}", s.rel_residual);
+        }
+    }
+
+    #[test]
+    fn observer_has_zero_impact_on_recycled_sequence() {
+        // Solve the same 3-system sequence twice — once silently, once with a
+        // recording observer — and require bit-identical iteration counts and
+        // solutions, plus recycle events on the warm solves.
+        use crate::obs::{RecordingObserver, SolveEvent};
+        let n = 200;
+        let base = lap1d(n);
+        let cfg = SolverConfig::default().with_tol(1e-9).with_m(25).with_k(6);
+        let mut rng = Rng::new(91);
+        let systems: Vec<(Csr, Vec<f64>)> =
+            (0..3).map(|i| (base.add_diag(0.01 * i as f64), rng.normals(n))).collect();
+
+        let mut rec1 = Recycler::new();
+        let mut plain: Vec<(Vec<f64>, SolveStats)> = Vec::new();
+        for (a, b) in &systems {
+            let mut x = vec![0.0; n];
+            let s = gcrodr(a, b, &mut x, &Identity, &cfg, &mut rec1);
+            plain.push((x, s));
+        }
+
+        let mut rec2 = Recycler::new();
+        for (i, (a, b)) in systems.iter().enumerate() {
+            let mut x = vec![0.0; n];
+            let mut obs = RecordingObserver::new();
+            let s = gcrodr_observed(a, b, &mut x, &Identity, &cfg, &mut rec2, &mut obs);
+            assert_eq!(s.iters, plain[i].1.iters, "system {i}");
+            assert_eq!(s.stop, plain[i].1.stop, "system {i}");
+            for (u, v) in x.iter().zip(&plain[i].0) {
+                assert_eq!(u.to_bits(), v.to_bits(), "system {i}");
+            }
+            assert!(matches!(obs.events.first(), Some(SolveEvent::Start { .. })));
+            assert!(matches!(obs.events.last(), Some(SolveEvent::End { .. })));
+            if i > 0 {
+                // Warm solves must report the installed recycle space.
+                assert!(
+                    obs.events.iter().any(|e| matches!(e, SolveEvent::Recycle { k, .. } if *k > 0)),
+                    "system {i} recorded no recycle event: {:?}",
+                    obs.events
+                );
+                assert!(obs.max_deflation_dim() >= 1);
+            }
         }
     }
 

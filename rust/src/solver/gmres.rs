@@ -6,6 +6,7 @@
 //! match PETSc's `KSPSetTolerances(rtol)`.
 
 use crate::la::{axpy, norm2, Csr};
+use crate::obs::{NoopObserver, SolveObserver};
 use crate::precond::Preconditioner;
 use crate::solver::stats::{SolveStats, SolverConfig, StopReason};
 use crate::util::timer::Timer;
@@ -17,6 +18,21 @@ pub fn gmres(
     x: &mut [f64],
     m_inv: &dyn Preconditioner,
     cfg: &SolverConfig,
+) -> SolveStats {
+    gmres_observed(a, b, x, m_inv, cfg, &mut NoopObserver)
+}
+
+/// [`gmres`] with iteration-level observability: `obs` receives cycle
+/// residuals and the final outcome. The observer only ever reads copies of
+/// solver state, so the arithmetic (and therefore iteration counts and the
+/// solution) is bit-identical to the unobserved path.
+pub fn gmres_observed(
+    a: &Csr,
+    b: &[f64],
+    x: &mut [f64],
+    m_inv: &dyn Preconditioner,
+    cfg: &SolverConfig,
+    obs: &mut dyn SolveObserver,
 ) -> SolveStats {
     let timer = Timer::start();
     let n = b.len();
@@ -41,11 +57,20 @@ pub fn gmres(
         axpy(-1.0, &w, &mut r);
         norm2(&r) / bnorm
     };
+    obs.on_start(n, rel);
     if cfg.record_trace {
         trace.push((0, rel));
     }
     if rel < cfg.tol {
-        return SolveStats { iters: 0, seconds: timer.secs(), rel_residual: rel, stop: StopReason::Converged, trace };
+        let stats = SolveStats {
+            iters: 0,
+            seconds: timer.secs(),
+            rel_residual: rel,
+            stop: StopReason::Converged,
+            trace,
+        };
+        obs.on_end(&stats);
+        return stats;
     }
 
     'restart: loop {
@@ -129,6 +154,7 @@ pub fn gmres(
         m_inv.apply(&vy, &mut z);
         axpy(1.0, &z, x);
 
+        obs.on_cycle(total_iters, rel);
         if cfg.record_trace {
             trace.push((total_iters, rel));
         }
@@ -140,13 +166,15 @@ pub fn gmres(
             let mut r = b.to_vec();
             a.matvec_into(x, &mut w);
             axpy(-1.0, &w, &mut r);
-            return SolveStats {
+            let stats = SolveStats {
                 iters: total_iters,
                 seconds: timer.secs(),
                 rel_residual: norm2(&r) / bnorm,
                 stop: StopReason::MaxIters,
                 trace,
             };
+            obs.on_end(&stats);
+            return stats;
         }
     }
 
@@ -162,7 +190,15 @@ pub fn gmres(
     } else {
         StopReason::Breakdown
     };
-    SolveStats { iters: total_iters, seconds: timer.secs(), rel_residual: final_rel, stop, trace }
+    let stats = SolveStats {
+        iters: total_iters,
+        seconds: timer.secs(),
+        rel_residual: final_rel,
+        stop,
+        trace,
+    };
+    obs.on_end(&stats);
+    stats
 }
 
 #[cfg(test)]
@@ -258,6 +294,42 @@ mod tests {
             let stats = solve_and_check(&a, &SolverConfig::default().with_tol(1e-8), p.as_ref());
             assert!(stats.iters > 0, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn observer_has_zero_impact_on_numerics() {
+        // Acceptance gate: solving with a recording observer must produce
+        // bit-identical iteration counts, residuals and solutions to the
+        // default no-op path.
+        use crate::obs::{RecordingObserver, SolveEvent};
+        let a = lap1d(300);
+        let b = vec![1.0; 300];
+        let cfg = SolverConfig::default().with_tol(1e-10).with_m(20);
+        let mut x1 = vec![0.0; 300];
+        let s1 = gmres(&a, &b, &mut x1, &Identity, &cfg);
+        let mut x2 = vec![0.0; 300];
+        let mut obs = RecordingObserver::new();
+        let s2 = gmres_observed(&a, &b, &mut x2, &Identity, &cfg, &mut obs);
+        assert_eq!(s1.iters, s2.iters);
+        assert_eq!(s1.stop, s2.stop);
+        assert_eq!(s1.rel_residual.to_bits(), s2.rel_residual.to_bits());
+        for (u, v) in x1.iter().zip(&x2) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        // The event stream brackets the solve and ends on the true stats.
+        assert!(matches!(obs.events.first(), Some(SolveEvent::Start { .. })));
+        match obs.events.last() {
+            Some(SolveEvent::End { iters, stop, .. }) => {
+                assert_eq!(*iters, s2.iters);
+                assert_eq!(*stop, "converged");
+            }
+            other => panic!("expected End event, got {other:?}"),
+        }
+        // Cycle events land on cycle boundaries, monotone in iters.
+        let cycles = obs.cycles();
+        assert!(!cycles.is_empty());
+        assert!(cycles.windows(2).all(|w| w[0].0 < w[1].0));
+        assert_eq!(cycles.last().unwrap().0, s2.iters);
     }
 
     #[test]

@@ -6,8 +6,8 @@ pub mod gmres;
 pub mod harmonic;
 pub mod stats;
 
-pub use gcrodr::{gcrodr, Recycler};
-pub use gmres::gmres;
+pub use gcrodr::{gcrodr, gcrodr_observed, Recycler};
+pub use gmres::{gmres, gmres_observed};
 pub use stats::{SolveStats, SolverConfig, StopReason};
 
 use crate::la::Csr;

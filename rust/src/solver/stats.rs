@@ -12,6 +12,17 @@ pub enum StopReason {
     Breakdown,
 }
 
+impl StopReason {
+    /// Stable machine-readable tag (the JSONL trace `stop` field).
+    pub fn label(&self) -> &'static str {
+        match self {
+            StopReason::Converged => "converged",
+            StopReason::MaxIters => "max_iters",
+            StopReason::Breakdown => "breakdown",
+        }
+    }
+}
+
 /// Per-system solve outcome.
 #[derive(Debug, Clone)]
 pub struct SolveStats {

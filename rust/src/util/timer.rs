@@ -56,4 +56,33 @@ mod tests {
         let (_, s) = best_of(3, || std::thread::sleep(std::time::Duration::from_millis(1)));
         assert!(s >= 0.0005);
     }
+
+    #[test]
+    fn timer_is_monotonic() {
+        let t = Timer::start();
+        let a = t.secs();
+        let b = t.secs();
+        assert!(a >= 0.0);
+        assert!(b >= a, "{b} < {a}");
+    }
+
+    #[test]
+    fn best_of_keeps_result_of_fastest_rep() {
+        // Each rep returns a distinct value; whichever rep was fastest, the
+        // returned value must be internally consistent with `reps` calls.
+        let mut calls = 0;
+        let (v, s) = best_of(5, || {
+            calls += 1;
+            42
+        });
+        assert_eq!(v, 42);
+        assert_eq!(calls, 5);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn best_of_rejects_zero_reps() {
+        let _ = best_of(0, || ());
+    }
 }

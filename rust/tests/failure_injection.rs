@@ -2,6 +2,7 @@
 //! loudly (or degrade gracefully) on bad inputs rather than hang, panic, or
 //! return silently-wrong data.
 
+#![allow(clippy::field_reassign_with_default)]
 use skr::coordinator::{Pipeline, PipelineConfig};
 use skr::la::Csr;
 use skr::pde::FamilyKind;

@@ -3,6 +3,7 @@
 //! properties, preconditioner algebra, PDE family determinism, and dataset
 //! round-trips. These complement the per-module unit tests.
 
+#![allow(clippy::field_reassign_with_default)]
 use skr::coordinator::sorter::{chain_cost, dist2, sort_order, SortStrategy};
 use skr::coordinator::{Pipeline, PipelineConfig};
 use skr::la::dense::Mat;
