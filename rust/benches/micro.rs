@@ -4,8 +4,8 @@
 //! in EXPERIMENTS.md. Custom min-of-N harness (criterion unavailable
 //! offline).
 
-use skr::la::{dot, eig, Csr, ZMat};
 use skr::la::dense::Mat;
+use skr::la::{dot, eig, Csr, Sparsity, ZMat};
 use skr::pde::{generate, FamilyKind};
 use skr::precond::PrecondKind;
 use skr::solver::{gcrodr, gmres, Recycler, SolverConfig};
@@ -41,6 +41,47 @@ fn main() {
     });
     w[0] += 0.0;
     report("cgs2 vs 30 basis @10k", "", t);
+
+    // --- assembly: fresh triplets vs stamping onto a shared pattern -----------
+    {
+        let side = (n as f64).sqrt() as usize;
+        let mut trips = Vec::with_capacity(5 * n);
+        for i in 0..side {
+            for j in 0..side {
+                let row = i * side + j;
+                trips.push((row, row, 4.0));
+                if i > 0 {
+                    trips.push((row, row - side, -1.0));
+                }
+                if i + 1 < side {
+                    trips.push((row, row + side, -1.0));
+                }
+                if j > 0 {
+                    trips.push((row, row - 1, -1.0));
+                }
+                if j + 1 < side {
+                    trips.push((row, row + 1, -1.0));
+                }
+            }
+        }
+        let (_, t) = best_of(20, || {
+            let m = Csr::from_triplets(side * side, side * side, &trips);
+            std::hint::black_box(m.nnz());
+        });
+        report("assemble from_triplets 10k", &format!("{} trips", trips.len()), t);
+
+        let pairs: Vec<(usize, usize)> = trips.iter().map(|&(r, c, _)| (r, c)).collect();
+        let sp = std::sync::Arc::new(Sparsity::from_pattern(side * side, side * side, &pairs));
+        let stamped: Vec<f64> = {
+            let m = Csr::from_triplets(side * side, side * side, &trips);
+            m.values().to_vec()
+        };
+        let (_, t) = best_of(20, || {
+            let m = Csr::with_values(sp.clone(), stamped.clone()).unwrap();
+            std::hint::black_box(m.nnz());
+        });
+        report("assemble with_values 10k", &format!("{} nnz", sp.nnz()), t);
+    }
 
     // --- preconditioner applies ----------------------------------------------
     for kind in [PrecondKind::Jacobi, PrecondKind::Sor, PrecondKind::Ilu, PrecondKind::Asm] {

@@ -29,6 +29,14 @@ pub struct RunMetrics {
     pub rel_residual_sum: f64,
     /// Total seconds workers spent blocked in the bounded writer channel.
     pub backpressure_seconds: f64,
+    /// Systems whose matrix shared the previous system's `Arc<Sparsity>` by
+    /// pointer (the PDE families' shared-pattern fast path).
+    pub sparsity_reuse: usize,
+    /// Systems whose preconditioner skipped the symbolic phase (fill
+    /// positions, subdomain maps, block layouts) and only refactored values.
+    pub symbolic_reuse: usize,
+    /// Solves that reran on pooled Krylov buffers without reallocation.
+    pub workspace_reuse: usize,
     /// Per-system inner-iteration histogram.
     pub iters_hist: Histogram,
     /// Per-system solve-seconds histogram.
@@ -52,6 +60,9 @@ impl Default for RunMetrics {
             rel_residual_worst: 0.0,
             rel_residual_sum: 0.0,
             backpressure_seconds: 0.0,
+            sparsity_reuse: 0,
+            symbolic_reuse: 0,
+            workspace_reuse: 0,
             iters_hist: Histogram::iters_buckets(),
             time_hist: Histogram::seconds_buckets(),
             delta_hist: Histogram::unit_buckets(),
@@ -133,6 +144,9 @@ impl RunMetrics {
         self.rel_residual_worst = self.rel_residual_worst.max(other.rel_residual_worst);
         self.rel_residual_sum += other.rel_residual_sum;
         self.backpressure_seconds += other.backpressure_seconds;
+        self.sparsity_reuse += other.sparsity_reuse;
+        self.symbolic_reuse += other.symbolic_reuse;
+        self.workspace_reuse += other.workspace_reuse;
         self.iters_hist.merge(&other.iters_hist);
         self.time_hist.merge(&other.time_hist);
         self.delta_hist.merge(&other.delta_hist);
@@ -164,6 +178,21 @@ impl RunMetrics {
             "skr_backpressure_seconds_total",
             "seconds workers blocked on the writer channel",
             self.backpressure_seconds,
+        );
+        counter(
+            "skr_sparsity_reuse_total",
+            "systems sharing the previous matrix's Arc<Sparsity>",
+            self.sparsity_reuse as f64,
+        );
+        counter(
+            "skr_symbolic_reuse_total",
+            "preconditioner builds that skipped the symbolic phase",
+            self.symbolic_reuse as f64,
+        );
+        counter(
+            "skr_workspace_reuse_total",
+            "solves rerun on pooled Krylov buffers",
+            self.workspace_reuse as f64,
         );
         let _ = writeln!(out, "# TYPE skr_wall_seconds gauge");
         let _ = writeln!(out, "skr_wall_seconds {}", self.wall_seconds);
@@ -226,6 +255,9 @@ mod tests {
         s.rel_residual = 1e-9;
         a.absorb(&s);
         a.backpressure_seconds = 0.5;
+        a.sparsity_reuse = 3;
+        a.symbolic_reuse = 2;
+        a.workspace_reuse = 1;
         a.record_delta(0.25);
 
         let mut b = RunMetrics::default();
@@ -233,12 +265,18 @@ mod tests {
         s2.rel_residual = 3e-9;
         b.absorb(&s2);
         b.backpressure_seconds = 0.25;
+        b.sparsity_reuse = 4;
+        b.symbolic_reuse = 4;
+        b.workspace_reuse = 4;
         b.record_delta(0.85);
 
         a.merge(&b);
         assert!((a.rel_residual_worst - 3e-9).abs() < 1e-24);
         assert!((a.backpressure_seconds - 0.75).abs() < 1e-15);
         assert_eq!(a.delta_hist.count(), 2);
+        assert_eq!(a.sparsity_reuse, 7);
+        assert_eq!(a.symbolic_reuse, 6);
+        assert_eq!(a.workspace_reuse, 5);
     }
 
     #[test]
@@ -246,12 +284,18 @@ mod tests {
         let mut m = RunMetrics::default();
         m.absorb(&stat(42, 0.5, StopReason::Converged));
         m.backpressure_seconds = 0.125;
+        m.sparsity_reuse = 9;
+        m.symbolic_reuse = 8;
+        m.workspace_reuse = 7;
         m.record_delta(0.5);
         let text = m.prometheus_text();
         for series in [
             "skr_systems_total 1",
             "skr_iters_total 42",
             "skr_backpressure_seconds_total 0.125",
+            "skr_sparsity_reuse_total 9",
+            "skr_symbolic_reuse_total 8",
+            "skr_workspace_reuse_total 7",
             "skr_solve_iters_bucket",
             "skr_solve_seconds_bucket",
             "skr_delta_bucket",

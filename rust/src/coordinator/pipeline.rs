@@ -14,8 +14,14 @@
 //! timeline (`gen`, `sort`, `shard`, `solve`, `solve/w{i}`,
 //! `solve/w{i}/sys{id}`); when `cfg.trace_out` is set the run additionally
 //! streams a JSONL event trace ([`TraceSink`]) with per-cycle residuals from
-//! a [`RecordingObserver`] threaded into the solvers. With tracing off the
-//! plain `gmres`/`gcrodr` entry points run — bit-identical numerics.
+//! a [`RecordingObserver`] threaded into the solvers; with tracing off a
+//! [`NoopObserver`] rides the same workspace entry points — bit-identical
+//! numerics either way.
+//!
+//! Each worker owns the per-shard reusable state: one solver [`Workspace`],
+//! one cached `SymbolicPrecond` keyed on the matrix `Sparsity`, and one
+//! [`Recycler`]. The reuse tallies surface in [`RunMetrics`] and the trace's
+//! `run` event.
 
 use super::config::PipelineConfig;
 use super::dataset::{DatasetSummary, DatasetWriter};
@@ -23,15 +29,16 @@ use super::delta::{delta_between, DeltaTracker};
 use super::metrics::RunMetrics;
 use super::scheduler::shard;
 use super::sorter::sort_order;
-use crate::obs::{Progress, Recorder, RecordingObserver, SpanRecord, TraceSink};
+use crate::la::Sparsity;
+use crate::obs::{NoopObserver, Progress, Recorder, RecordingObserver, SpanRecord, TraceSink};
 use crate::pde::ProblemFamily;
-use crate::solver::{
-    gcrodr, gcrodr_observed, gmres, gmres_observed, Engine, Recycler, SolveStats, StopReason,
-};
+use crate::precond::SymbolicPrecond;
+use crate::solver::{gcrodr_ws, gmres_ws, Engine, Recycler, SolveStats, StopReason, Workspace};
 use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::util::timer::Timer;
 use anyhow::{Context, Result};
+use std::sync::Arc;
 use std::sync::mpsc::sync_channel;
 
 /// Per-worker utilization rollup for one pipeline run.
@@ -210,6 +217,9 @@ impl Pipeline {
                 delta.record(d);
             }
             metrics.backpressure_seconds += out.backpressure_seconds;
+            metrics.sparsity_reuse += out.sparsity_reuse;
+            metrics.symbolic_reuse += out.symbolic_reuse;
+            metrics.workspace_reuse += out.workspace_reuse;
             workers.push(WorkerReport {
                 worker: out.worker,
                 systems: out.systems,
@@ -249,6 +259,9 @@ impl Pipeline {
                 ("wall_seconds", Json::Num(metrics.wall_seconds)),
                 ("rel_residual_worst", Json::Num(metrics.rel_residual_worst)),
                 ("backpressure_seconds", Json::Num(metrics.backpressure_seconds)),
+                ("sparsity_reuse", Json::Num(metrics.sparsity_reuse as f64)),
+                ("symbolic_reuse", Json::Num(metrics.symbolic_reuse as f64)),
+                ("workspace_reuse", Json::Num(metrics.workspace_reuse as f64)),
             ]));
             sink.flush();
         }
@@ -280,14 +293,19 @@ struct WorkerOutput {
     busy_seconds: f64,
     wall_seconds: f64,
     backpressure_seconds: f64,
+    sparsity_reuse: usize,
+    symbolic_reuse: usize,
+    workspace_reuse: usize,
 }
 
 /// Solve one contiguous batch sequentially, recycling across its systems.
 ///
-/// When `sink` is set, solves run through the observed entry points with a
-/// [`RecordingObserver`] and the buffered events stream out as JSONL;
-/// otherwise the plain entry points run (identical numerics, zero tracing
-/// overhead).
+/// When `sink` is set, solves run with a [`RecordingObserver`] and the
+/// buffered events stream out as JSONL; otherwise a [`NoopObserver`] rides
+/// along (identical numerics, zero tracing overhead). Either way the solves
+/// share one [`Workspace`] and one cached symbolic preconditioner phase —
+/// after the shard's first system, steady state performs no Krylov-buffer
+/// allocation and no symbolic factorization.
 #[allow(clippy::too_many_arguments)]
 fn solve_batch(
     family: &dyn ProblemFamily,
@@ -302,6 +320,11 @@ fn solve_batch(
 ) -> Result<WorkerOutput> {
     let worker_start = recorder.now();
     let mut rec = Recycler::new();
+    let mut ws = Workspace::new();
+    let mut symbolic: Option<SymbolicPrecond> = None;
+    let mut prev_sparsity: Option<Arc<Sparsity>> = None;
+    let mut sparsity_reuse = 0usize;
+    let mut symbolic_reuse = 0usize;
     let mut stats = Vec::with_capacity(batch.len());
     let mut deltas = Vec::new();
     let mut prev_space: Option<Vec<Vec<f64>>> = None;
@@ -309,16 +332,29 @@ fn solve_batch(
     let mut backpressure_seconds = 0.0;
     for &id in batch {
         let sys = family.sample(id, &mut master.split(id as u64))?;
-        let p = cfg.precond.build(&sys.a)?;
+        if prev_sparsity.as_ref().is_some_and(|sp| Arc::ptr_eq(sp, sys.a.sparsity())) {
+            sparsity_reuse += 1;
+        } else {
+            prev_sparsity = Some(sys.a.sparsity().clone());
+        }
+        let sym = match symbolic.take() {
+            Some(s) if s.matches(&sys.a) => {
+                symbolic_reuse += 1;
+                s
+            }
+            _ => cfg.precond.symbolic(sys.a.sparsity())?,
+        };
+        let p = sym.refactor(&sys.a)?;
+        symbolic = Some(sym);
         let mut x = vec![0.0; sys.b.len()];
         let sys_start = recorder.now();
         let s = if let Some(sink) = sink {
             let mut obs = RecordingObserver::new();
             let s = match cfg.engine {
                 Engine::Gmres => {
-                    gmres_observed(&sys.a, &sys.b, &mut x, p.as_ref(), &cfg.solver, &mut obs)
+                    gmres_ws(&sys.a, &sys.b, &mut x, p.as_ref(), &cfg.solver, &mut obs, &mut ws)
                 }
-                Engine::SkrRecycle => gcrodr_observed(
+                Engine::SkrRecycle => gcrodr_ws(
                     &sys.a,
                     &sys.b,
                     &mut x,
@@ -326,6 +362,7 @@ fn solve_batch(
                     &cfg.solver,
                     &mut rec,
                     &mut obs,
+                    &mut ws,
                 ),
             };
             sink.emit_all(&TraceSink::solve_events(
@@ -339,10 +376,25 @@ fn solve_batch(
             s
         } else {
             match cfg.engine {
-                Engine::Gmres => gmres(&sys.a, &sys.b, &mut x, p.as_ref(), &cfg.solver),
-                Engine::SkrRecycle => {
-                    gcrodr(&sys.a, &sys.b, &mut x, p.as_ref(), &cfg.solver, &mut rec)
-                }
+                Engine::Gmres => gmres_ws(
+                    &sys.a,
+                    &sys.b,
+                    &mut x,
+                    p.as_ref(),
+                    &cfg.solver,
+                    &mut NoopObserver,
+                    &mut ws,
+                ),
+                Engine::SkrRecycle => gcrodr_ws(
+                    &sys.a,
+                    &sys.b,
+                    &mut x,
+                    p.as_ref(),
+                    &cfg.solver,
+                    &mut rec,
+                    &mut NoopObserver,
+                    &mut ws,
+                ),
             }
         };
         recorder.record(
@@ -380,6 +432,9 @@ fn solve_batch(
         busy_seconds,
         wall_seconds,
         backpressure_seconds,
+        sparsity_reuse,
+        symbolic_reuse,
+        workspace_reuse: ws.reuse_count(),
     })
 }
 
@@ -434,6 +489,12 @@ mod tests {
         for w in &r.workers {
             assert!(w.utilization() > 0.0 && w.utilization() <= 1.0 + 1e-9, "{w:?}");
         }
+        // Darcy stamps every sample onto one shared pattern, so each worker
+        // reuses structure, symbolic phase and workspace for every system
+        // after its shard's first: 12 systems − 2 workers = 10 each.
+        assert_eq!(r.metrics.sparsity_reuse, 10);
+        assert_eq!(r.metrics.symbolic_reuse, 10);
+        assert_eq!(r.metrics.workspace_reuse, 10);
     }
 
     #[test]

@@ -1,48 +1,67 @@
 //! Compressed-sparse-row matrices — the discretised PDE operators.
 //!
-//! All solver/preconditioner hot loops run over this layout; `matvec_into`
-//! is the single most executed kernel in the repository.
+//! A matrix is a `{ sparsity: Arc<Sparsity>, vals: Vec<f64> }` pair: the
+//! structure half is shared across every system of a generation sequence
+//! (same grid, same stencil), the value half is per-system. All
+//! solver/preconditioner hot loops run over this layout; `matvec_into` is
+//! the single most executed kernel in the repository.
 
+use super::sparsity::Sparsity;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
-/// CSR sparse matrix with `f64` entries.
+/// CSR sparse matrix with `f64` entries and shared structure.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
-    nrows: usize,
-    ncols: usize,
-    /// Row start offsets, length `nrows + 1`.
-    pub row_ptr: Vec<usize>,
-    /// Column indices, sorted within each row.
-    pub col_idx: Vec<usize>,
-    /// Nonzero values, aligned with `col_idx`.
-    pub vals: Vec<f64>,
+    sparsity: Arc<Sparsity>,
+    vals: Vec<f64>,
 }
 
 impl Csr {
     /// Build from (row, col, value) triplets; duplicates are summed, entries
     /// that sum to exactly zero are kept (structural nonzeros matter for ILU).
+    /// Compatibility constructor — prefer [`Sparsity::from_pattern`] +
+    /// [`Csr::with_values`] when many systems share one structure.
     pub fn from_triplets(nrows: usize, ncols: usize, triplets: &[(usize, usize, f64)]) -> Csr {
         let mut entries: Vec<(usize, usize, f64)> = triplets.to_vec();
         entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
-        // merge duplicates
-        let mut merged: Vec<(usize, usize, f64)> = Vec::with_capacity(entries.len());
-        for (r, c, v) in entries {
+        // Merge duplicates in place: `w` is the write cursor over the sorted run.
+        let mut w = 0usize;
+        for k in 0..entries.len() {
+            let (r, c, v) = entries[k];
             assert!(r < nrows && c < ncols, "triplet ({r},{c}) out of bounds");
-            match merged.last_mut() {
-                Some(last) if last.0 == r && last.1 == c => last.2 += v,
-                _ => merged.push((r, c, v)),
+            if w > 0 && entries[w - 1].0 == r && entries[w - 1].1 == c {
+                entries[w - 1].2 += v;
+            } else {
+                entries[w] = (r, c, v);
+                w += 1;
             }
         }
+        entries.truncate(w);
         let mut row_ptr = vec![0usize; nrows + 1];
-        for &(r, _, _) in &merged {
+        for &(r, _, _) in &entries {
             row_ptr[r + 1] += 1;
         }
         for i in 0..nrows {
             row_ptr[i + 1] += row_ptr[i];
         }
-        let col_idx = merged.iter().map(|&(_, c, _)| c).collect();
-        let vals = merged.iter().map(|&(_, _, v)| v).collect();
-        Csr { nrows, ncols, row_ptr, col_idx, vals }
+        let mut col_idx = Vec::with_capacity(w);
+        let mut vals = Vec::with_capacity(w);
+        for &(_, c, v) in &entries {
+            col_idx.push(c);
+            vals.push(v);
+        }
+        let sparsity = Arc::new(Sparsity::from_parts(nrows, ncols, row_ptr, col_idx));
+        Csr { sparsity, vals }
+    }
+
+    /// Stamp values onto a shared structure. `vals` must be in CSR order
+    /// (row-major, columns sorted — i.e. aligned with `sparsity.col_idx`).
+    pub fn with_values(sparsity: Arc<Sparsity>, vals: Vec<f64>) -> Result<Csr> {
+        if vals.len() != sparsity.nnz() {
+            bail!("with_values: {} values for a structure with {} nonzeros", vals.len(), sparsity.nnz());
+        }
+        Ok(Csr { sparsity, vals })
     }
 
     /// Identity matrix.
@@ -50,12 +69,17 @@ impl Csr {
         Csr::from_triplets(n, n, &(0..n).map(|i| (i, i, 1.0)).collect::<Vec<_>>())
     }
 
+    /// The shared structure half.
+    pub fn sparsity(&self) -> &Arc<Sparsity> {
+        &self.sparsity
+    }
+
     pub fn nrows(&self) -> usize {
-        self.nrows
+        self.sparsity.nrows()
     }
 
     pub fn ncols(&self) -> usize {
-        self.ncols
+        self.sparsity.ncols()
     }
 
     pub fn nnz(&self) -> usize {
@@ -67,16 +91,31 @@ impl Csr {
         &self.vals
     }
 
+    /// Mutable view of the stored values (structure stays shared).
+    pub fn values_mut(&mut self) -> &mut [f64] {
+        &mut self.vals
+    }
+
+    /// Structure and mutable values together (split borrow for factor loops).
+    pub fn parts_mut(&mut self) -> (&Sparsity, &mut [f64]) {
+        (&self.sparsity, &mut self.vals)
+    }
+
     /// Column indices aligned with [`Csr::values`].
     pub fn col_indices(&self) -> &[usize] {
-        &self.col_idx
+        &self.sparsity.col_idx
+    }
+
+    /// Row start offsets, length `nrows + 1`.
+    pub fn row_offsets(&self) -> &[usize] {
+        &self.sparsity.row_ptr
     }
 
     /// Row `i` as (cols, vals) slices.
     #[inline]
     pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
-        let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
-        (&self.col_idx[a..b], &self.vals[a..b])
+        let (a, b) = (self.sparsity.row_ptr[i], self.sparsity.row_ptr[i + 1]);
+        (&self.sparsity.col_idx[a..b], &self.vals[a..b])
     }
 
     /// Entry lookup (binary search within the row).
@@ -90,7 +129,7 @@ impl Csr {
 
     /// y = A x (allocating).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        let mut y = vec![0.0; self.nrows];
+        let mut y = vec![0.0; self.nrows()];
         self.matvec_into(x, &mut y);
         y
     }
@@ -98,24 +137,27 @@ impl Csr {
     /// y = A x into a caller-provided buffer. Hot path.
     #[inline]
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
-        debug_assert_eq!(x.len(), self.ncols);
-        debug_assert_eq!(y.len(), self.nrows);
-        for i in 0..self.nrows {
-            let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        debug_assert_eq!(x.len(), self.ncols());
+        debug_assert_eq!(y.len(), self.nrows());
+        let row_ptr = &self.sparsity.row_ptr;
+        let col_idx = &self.sparsity.col_idx;
+        let vals = &self.vals;
+        for (i, yi) in y.iter_mut().enumerate() {
+            let (a, b) = (row_ptr[i], row_ptr[i + 1]);
             let mut s = 0.0;
             // Indexed loop over the row; bounds checks hoist since a..b are
             // monotone and col_idx entries were validated at construction.
             for k in a..b {
-                s += self.vals[k] * x[self.col_idx[k]];
+                s += vals[k] * x[col_idx[k]];
             }
-            y[i] = s;
+            *yi = s;
         }
     }
 
     /// y = Aᵀ x.
     pub fn matvec_transpose(&self, x: &[f64]) -> Vec<f64> {
-        let mut y = vec![0.0; self.ncols];
-        for i in 0..self.nrows {
+        let mut y = vec![0.0; self.ncols()];
+        for i in 0..self.nrows() {
             let (cols, vals) = self.row(i);
             let xi = x[i];
             for (&c, &v) in cols.iter().zip(vals) {
@@ -128,31 +170,31 @@ impl Csr {
     /// Transposed copy.
     pub fn transpose(&self) -> Csr {
         let mut trips = Vec::with_capacity(self.nnz());
-        for i in 0..self.nrows {
+        for i in 0..self.nrows() {
             let (cols, vals) = self.row(i);
             for (&c, &v) in cols.iter().zip(vals) {
                 trips.push((c, i, v));
             }
         }
-        Csr::from_triplets(self.ncols, self.nrows, &trips)
+        Csr::from_triplets(self.ncols(), self.nrows(), &trips)
     }
 
     /// Main diagonal (zeros where absent).
     pub fn diag(&self) -> Vec<f64> {
-        (0..self.nrows.min(self.ncols)).map(|i| self.get(i, i)).collect()
+        (0..self.nrows().min(self.ncols())).map(|i| self.get(i, i)).collect()
     }
 
     /// Symmetric part ½(A + Aᵀ) (used by the ICC fallback on nonsymmetric A).
     pub fn symmetric_part(&self) -> Csr {
         let mut trips = Vec::with_capacity(2 * self.nnz());
-        for i in 0..self.nrows {
+        for i in 0..self.nrows() {
             let (cols, vals) = self.row(i);
             for (&c, &v) in cols.iter().zip(vals) {
                 trips.push((i, c, 0.5 * v));
                 trips.push((c, i, 0.5 * v));
             }
         }
-        Csr::from_triplets(self.nrows, self.ncols, &trips)
+        Csr::from_triplets(self.nrows(), self.ncols(), &trips)
     }
 
     /// Frobenius norm.
@@ -163,7 +205,7 @@ impl Csr {
     /// Max relative asymmetry |a_ij - a_ji| / ||A||_F — cheap symmetry probe.
     pub fn asymmetry(&self) -> f64 {
         let mut worst: f64 = 0.0;
-        for i in 0..self.nrows {
+        for i in 0..self.nrows() {
             let (cols, vals) = self.row(i);
             for (&c, &v) in cols.iter().zip(vals) {
                 worst = worst.max((v - self.get(c, i)).abs());
@@ -186,41 +228,23 @@ impl Csr {
 
     /// A + alpha * I (square matrices). Keeps CSR invariants.
     pub fn add_diag(&self, alpha: f64) -> Csr {
-        assert_eq!(self.nrows, self.ncols);
-        let mut trips: Vec<(usize, usize, f64)> = Vec::with_capacity(self.nnz() + self.nrows);
-        for i in 0..self.nrows {
+        assert_eq!(self.nrows(), self.ncols());
+        let mut trips: Vec<(usize, usize, f64)> = Vec::with_capacity(self.nnz() + self.nrows());
+        for i in 0..self.nrows() {
             let (cols, vals) = self.row(i);
             for (&c, &v) in cols.iter().zip(vals) {
                 trips.push((i, c, v));
             }
             trips.push((i, i, alpha));
         }
-        Csr::from_triplets(self.nrows, self.ncols, &trips)
+        Csr::from_triplets(self.nrows(), self.ncols(), &trips)
     }
 
     /// Validate structural invariants (used by property tests).
     pub fn validate(&self) -> Result<()> {
-        if self.row_ptr.len() != self.nrows + 1 {
-            bail!("row_ptr length");
-        }
-        if *self.row_ptr.last().unwrap() != self.vals.len() || self.col_idx.len() != self.vals.len() {
-            bail!("ptr/idx/vals mismatch");
-        }
-        for i in 0..self.nrows {
-            if self.row_ptr[i] > self.row_ptr[i + 1] {
-                bail!("row_ptr not monotone at {i}");
-            }
-            let (cols, _) = self.row(i);
-            for w in cols.windows(2) {
-                if w[0] >= w[1] {
-                    bail!("row {i} columns not strictly increasing");
-                }
-            }
-            if let Some(&c) = cols.last() {
-                if c >= self.ncols {
-                    bail!("column out of range in row {i}");
-                }
-            }
+        self.sparsity.validate()?;
+        if self.vals.len() != self.sparsity.nnz() {
+            bail!("vals/structure mismatch");
         }
         Ok(())
     }
@@ -247,6 +271,33 @@ mod tests {
         assert_eq!(a.nnz(), 2);
         assert_eq!(a.get(1, 1), 5.0);
         a.validate().unwrap();
+    }
+
+    #[test]
+    fn with_values_matches_from_triplets() {
+        let trips = [(0, 0, 4.0), (0, 1, -1.0), (1, 0, -1.0), (1, 1, 4.0)];
+        let a = Csr::from_triplets(2, 2, &trips);
+        let pattern: Vec<(usize, usize)> = trips.iter().map(|&(r, c, _)| (r, c)).collect();
+        let sp = Arc::new(Sparsity::from_pattern(2, 2, &pattern));
+        let mut vals = vec![0.0; sp.nnz()];
+        for &(r, c, v) in &trips {
+            vals[sp.pos(r, c).unwrap()] = v;
+        }
+        let b = Csr::with_values(sp, vals).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn with_values_rejects_wrong_length() {
+        let sp = Arc::new(Sparsity::from_pattern(2, 2, &[(0, 0), (1, 1)]));
+        assert!(Csr::with_values(sp, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn clone_shares_structure() {
+        let a = sample();
+        let b = a.clone();
+        assert!(Arc::ptr_eq(a.sparsity(), b.sparsity()));
     }
 
     #[test]

@@ -1,19 +1,22 @@
-//! Linear-algebra substrate: CSR sparse matrices, dense (real and complex)
-//! matrices, Householder QR, a complex Hessenberg-QR eigensolver, a one-sided
-//! Jacobi SVD, and orthogonalization kernels. Everything the Krylov solvers
-//! and the δ-subspace instrumentation need, implemented in-tree.
+//! Linear-algebra substrate: CSR sparse matrices with shared structure
+//! ([`Sparsity`] behind an `Arc` + per-system values), dense (real and
+//! complex) matrices, Householder QR, a complex Hessenberg-QR eigensolver, a
+//! one-sided Jacobi SVD, and orthogonalization kernels. Everything the Krylov
+//! solvers and the δ-subspace instrumentation need, implemented in-tree.
 
 pub mod c64;
 pub mod csr;
 pub mod dense;
 pub mod eig;
 pub mod ortho;
+pub mod sparsity;
 pub mod svd;
 pub mod zmat;
 
 pub use c64::C64;
 pub use csr::Csr;
 pub use dense::Mat;
+pub use sparsity::Sparsity;
 pub use zmat::ZMat;
 
 /// Euclidean norm of a slice.

@@ -1,0 +1,161 @@
+//! Shared CSR structure — the pattern half of the matrix model.
+//!
+//! Every system in a generation run is discretised on the same grid with the
+//! same stencil, so the `row_ptr`/`col_idx` structure is identical across the
+//! whole sequence; only the numeric values differ. [`Sparsity`] captures that
+//! structure once, is shared between systems behind an `Arc`, and carries the
+//! precomputed diagonal positions that the symbolic preconditioner phases
+//! (ILU0/ICC0/ASM/BlockJacobi) key on.
+
+use anyhow::{bail, Result};
+
+/// Immutable CSR structure: dimensions, row offsets, sorted column indices,
+/// and precomputed main-diagonal positions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sparsity {
+    nrows: usize,
+    ncols: usize,
+    /// Row start offsets, length `nrows + 1`.
+    pub row_ptr: Vec<usize>,
+    /// Column indices, sorted strictly increasing within each row.
+    pub col_idx: Vec<usize>,
+    /// Position of entry (i, i) in `col_idx`/values order, `usize::MAX`
+    /// where the diagonal is structurally absent.
+    diag_pos: Vec<usize>,
+}
+
+impl Sparsity {
+    /// Build from (row, col) pairs; duplicates collapse to one entry.
+    pub fn from_pattern(nrows: usize, ncols: usize, pattern: &[(usize, usize)]) -> Sparsity {
+        let mut entries: Vec<(usize, usize)> = pattern.to_vec();
+        entries.sort_unstable();
+        entries.dedup();
+        let mut row_ptr = vec![0usize; nrows + 1];
+        for &(r, c) in &entries {
+            assert!(r < nrows && c < ncols, "pattern entry ({r},{c}) out of bounds");
+            row_ptr[r + 1] += 1;
+        }
+        for i in 0..nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let col_idx: Vec<usize> = entries.iter().map(|&(_, c)| c).collect();
+        Sparsity::from_parts(nrows, ncols, row_ptr, col_idx)
+    }
+
+    /// Assemble from already-built CSR structure arrays (caller guarantees
+    /// sorted, in-range columns; `validate` checks in tests).
+    pub(crate) fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<usize>,
+    ) -> Sparsity {
+        let mut s = Sparsity { nrows, ncols, row_ptr, col_idx, diag_pos: Vec::new() };
+        s.diag_pos = (0..nrows)
+            .map(|i| {
+                let (a, b) = (s.row_ptr[i], s.row_ptr[i + 1]);
+                match s.col_idx[a..b].binary_search(&i) {
+                    Ok(k) => a + k,
+                    Err(_) => usize::MAX,
+                }
+            })
+            .collect();
+        s
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Value-array range of row `i`.
+    #[inline]
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.row_ptr[i]..self.row_ptr[i + 1]
+    }
+
+    /// Column indices of row `i`.
+    #[inline]
+    pub fn row_cols(&self, i: usize) -> &[usize] {
+        &self.col_idx[self.row_ptr[i]..self.row_ptr[i + 1]]
+    }
+
+    /// Value-array position of the diagonal entry (i, i), if stored.
+    #[inline]
+    pub fn diag_pos(&self, i: usize) -> Option<usize> {
+        let p = self.diag_pos[i];
+        if p == usize::MAX {
+            None
+        } else {
+            Some(p)
+        }
+    }
+
+    /// Value-array position of entry (i, j), if stored (binary search).
+    #[inline]
+    pub fn pos(&self, i: usize, j: usize) -> Option<usize> {
+        let a = self.row_ptr[i];
+        self.col_idx[a..self.row_ptr[i + 1]].binary_search(&j).ok().map(|k| a + k)
+    }
+
+    /// Validate structural invariants (used by property tests).
+    pub fn validate(&self) -> Result<()> {
+        if self.row_ptr.len() != self.nrows + 1 {
+            bail!("row_ptr length");
+        }
+        if *self.row_ptr.last().unwrap() != self.col_idx.len() {
+            bail!("ptr/idx mismatch");
+        }
+        if self.diag_pos.len() != self.nrows {
+            bail!("diag_pos length");
+        }
+        for i in 0..self.nrows {
+            if self.row_ptr[i] > self.row_ptr[i + 1] {
+                bail!("row_ptr not monotone at {i}");
+            }
+            let cols = self.row_cols(i);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    bail!("row {i} columns not strictly increasing");
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c >= self.ncols {
+                    bail!("column out of range in row {i}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_sorts_and_dedups() {
+        let s = Sparsity::from_pattern(3, 3, &[(2, 2), (0, 0), (0, 1), (0, 1), (1, 1)]);
+        assert_eq!(s.nnz(), 4);
+        assert_eq!(s.row_cols(0), &[0, 1]);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn positions_resolve() {
+        let s = Sparsity::from_pattern(3, 3, &[(0, 0), (0, 2), (1, 0), (2, 1)]);
+        assert_eq!(s.pos(0, 2), Some(1));
+        assert_eq!(s.pos(1, 0), Some(2));
+        assert_eq!(s.pos(1, 1), None);
+        assert_eq!(s.diag_pos(0), Some(0));
+        assert_eq!(s.diag_pos(1), None);
+        assert_eq!(s.diag_pos(2), None);
+    }
+}

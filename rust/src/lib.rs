@@ -17,10 +17,36 @@
 //!   HLO text (`make artifacts`), loaded from Rust via [`runtime`].
 //! * **L1 (build-time python)** — the FNO spectral-convolution Pallas kernel.
 //!
+//! ## The L3 crate, module by module
+//!
+//! The in-tree modules mirror how a matrix flows through the system — and how
+//! much of it is *shared* along the way (see the README's "Memory model"):
+//!
+//! * [`la`] — sparse/dense linear algebra. A [`la::Csr`] matrix is a pair of
+//!   an immutable, `Arc`-shared [`la::Sparsity`] (structure: `row_ptr`,
+//!   `col_idx`, precomputed diagonal positions) and an owned value vector.
+//!   Sequences of same-structure systems share one `Sparsity` allocation.
+//! * [`pde`] — the four paper problem families (Darcy / Thermal / Poisson /
+//!   Helmholtz). Each family builds its pattern (or its whole constant
+//!   operator) once per `(family, grid)` and stamps per-sample values onto it.
+//! * [`precond`] — the seven preconditioners, each split into a symbolic
+//!   phase keyed on the `Sparsity` ([`precond::PrecondKind::symbolic`]: ILU0/
+//!   ICC0 fill positions, ASM subdomain maps, block layouts) and a cheap
+//!   per-matrix numeric [`precond::SymbolicPrecond::refactor`].
+//! * [`solver`] — GMRES(m) / GCRO-DR, plus the reusable [`solver::Workspace`]
+//!   (Krylov basis, Hessenberg, Givens, scratch) that sequence drivers thread
+//!   through consecutive solves.
+//! * [`coordinator`] — sort → shard → solve pipeline; each worker owns one
+//!   `Workspace` + cached symbolic preconditioner + recycler per shard.
+//! * [`obs`] — spans, JSONL traces, histograms and the structure/symbolic/
+//!   workspace reuse counters surfaced by `skr report`.
+//! * [`harness`], [`no`], [`runtime`] — paper tables/figures, the FNO, PJRT.
+//!
 //! The public entry points a downstream user needs:
 //!
 //! * [`coordinator::pipeline::Pipeline`] — end-to-end dataset generation,
-//! * [`solver::solve_sequence`] — solve a sequence of systems with either engine,
+//! * [`solver::solve_sequence`] — solve a sequence of systems with either
+//!   engine ([`solver::solve_sequence_traced`] also reports reuse tallies),
 //! * [`pde`] — the four paper problem families (Darcy / Thermal / Poisson / Helmholtz),
 //! * [`no::trainer`] — train the FNO on a generated dataset through the PJRT runtime.
 

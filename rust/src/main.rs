@@ -81,6 +81,15 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
         m.rel_residual_worst,
         m.mean_rel_residual()
     );
+    println!(
+        "reuse: sparsity {}/{}  symbolic {}/{}  workspace {}/{}",
+        m.sparsity_reuse,
+        m.systems,
+        m.symbolic_reuse,
+        m.systems,
+        m.workspace_reuse,
+        m.systems
+    );
     if m.max_iter_hits > 0 {
         println!("WARNING: {} systems hit the iteration cap", m.max_iter_hits);
     }

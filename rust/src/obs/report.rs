@@ -55,6 +55,14 @@ pub struct TraceReport {
     pub stages: BTreeMap<String, f64>,
     /// Engines seen in `solve` events (usually one; two for `compare`).
     pub engines: Vec<String>,
+    /// `run` summary events seen (0 for traces from older runs).
+    pub run_events: usize,
+    /// Structure/scratch reuse tallies from `run` events: systems that
+    /// shared the previous `Arc<Sparsity>`, preconditioner builds that
+    /// skipped the symbolic phase, and solves rerun on pooled buffers.
+    pub sparsity_reuse: usize,
+    pub symbolic_reuse: usize,
+    pub workspace_reuse: usize,
     pub parse_errors: usize,
 }
 
@@ -76,6 +84,10 @@ impl Default for TraceReport {
             per_worker: BTreeMap::new(),
             stages: BTreeMap::new(),
             engines: Vec::new(),
+            run_events: 0,
+            sparsity_reuse: 0,
+            symbolic_reuse: 0,
+            workspace_reuse: 0,
             parse_errors: 0,
         }
     }
@@ -107,7 +119,8 @@ impl TraceReport {
                 Some("recycle") => r.recycle_installs += 1,
                 Some("worker") => r.absorb_worker(&ev),
                 Some("span") => r.absorb_span(&ev),
-                // meta / run / unknown events are informational only.
+                Some("run") => r.absorb_run(&ev),
+                // meta / unknown events are informational only.
                 _ => {}
             }
         }
@@ -153,6 +166,14 @@ impl TraceReport {
         line.busy_seconds += num("busy_seconds");
         line.wall_seconds += num("wall_seconds");
         line.backpressure_seconds += num("backpressure_seconds");
+    }
+
+    fn absorb_run(&mut self, ev: &Json) {
+        let num = |k: &str| ev.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        self.run_events += 1;
+        self.sparsity_reuse += num("sparsity_reuse") as usize;
+        self.symbolic_reuse += num("symbolic_reuse") as usize;
+        self.workspace_reuse += num("workspace_reuse") as usize;
     }
 
     fn absorb_span(&mut self, ev: &Json) {
@@ -231,6 +252,18 @@ impl TraceReport {
             self.max_iter_hits,
             self.breakdowns
         );
+        if self.run_events > 0 {
+            let _ = writeln!(
+                out,
+                "reuse: sparsity {}/{}  symbolic {}/{}  workspace {}/{}",
+                self.sparsity_reuse,
+                self.systems,
+                self.symbolic_reuse,
+                self.systems,
+                self.workspace_reuse,
+                self.systems,
+            );
+        }
         if !self.stages.is_empty() {
             let stages: Vec<String> =
                 self.stages.iter().map(|(k, v)| format!("{k} {v:.3}s")).collect();
@@ -304,6 +337,7 @@ mod tests {
             r#"{"ev":"solve","id":2,"worker":1,"engine":"SKR","n":100,"iters":60,"seconds":0.6,"rel_residual":5e-7,"stop":"max_iters","recycle_k":5}"#,
             r#"{"ev":"worker","worker":0,"systems":2,"busy_seconds":0.3,"wall_seconds":0.4,"backpressure_seconds":0.05,"utilization":0.75}"#,
             r#"{"ev":"worker","worker":1,"systems":1,"busy_seconds":0.6,"wall_seconds":0.7,"backpressure_seconds":0.01,"utilization":0.857}"#,
+            r#"{"ev":"run","systems":3,"total_iters":120,"sparsity_reuse":1,"symbolic_reuse":1,"workspace_reuse":1}"#,
         ];
         let r = TraceReport::from_lines(lines.iter().copied()).unwrap();
         assert_eq!(r.systems, 3);
@@ -325,10 +359,16 @@ mod tests {
         // Only the top-level span lands in stages.
         assert_eq!(r.stages.len(), 1);
         assert!((r.stages["gen"] - 0.5).abs() < 1e-12);
+        // Reuse tallies come from the run event.
+        assert_eq!(r.run_events, 1);
+        assert_eq!(r.sparsity_reuse, 1);
+        assert_eq!(r.symbolic_reuse, 1);
+        assert_eq!(r.workspace_reuse, 1);
         // Rendering mentions the headline numbers.
         let text = r.render();
         assert!(text.contains("3 systems"));
         assert!(text.contains("per-worker timeline"));
+        assert!(text.contains("reuse: sparsity 1/3  symbolic 1/3  workspace 1/3"));
         assert_eq!(r.parse_errors, 0);
     }
 

@@ -8,9 +8,10 @@
 use super::grf::{self, GrfConfig};
 use super::grid::Grid;
 use super::ProblemFamily;
-use crate::la::Csr;
+use crate::la::{Csr, Sparsity};
 use crate::solver::LinearSystem;
 use crate::util::prng::Rng;
+use crate::util::shared::SharedOnce;
 use anyhow::Result;
 
 /// How the GRF is mapped to a permeability field.
@@ -34,6 +35,9 @@ pub struct DarcyFamily {
     pub grf: GrfConfig,
     /// Side of the coarse parameter grid used as the sort key.
     pub param_side: usize,
+    /// The 5-point stencil pattern, built once per (family, grid) and shared
+    /// by every sampled system — samples only stamp values onto it.
+    pattern: SharedOnce<Sparsity>,
 }
 
 impl DarcyFamily {
@@ -48,6 +52,7 @@ impl DarcyFamily {
             kmap: KMap::TwoPhase { lo: 1e-2, hi: 12.0 },
             grf: GrfConfig::default(),
             param_side: 16,
+            pattern: SharedOnce::new(),
         }
     }
 
@@ -70,6 +75,32 @@ impl DarcyFamily {
         };
         (k, side)
     }
+
+    /// Mirror of the stencil loop in [`ProblemFamily::sample`], positions
+    /// only: one (row, col) pair per nonzero.
+    fn build_pattern(&self) -> Sparsity {
+        let n = self.grid.n;
+        let mut pairs = Vec::with_capacity(5 * n * n);
+        for i in 0..n {
+            for j in 0..n {
+                let row = self.grid.idx(i, j);
+                pairs.push((row, row));
+                if i > 0 {
+                    pairs.push((row, self.grid.idx(i - 1, j)));
+                }
+                if i + 1 < n {
+                    pairs.push((row, self.grid.idx(i + 1, j)));
+                }
+                if j > 0 {
+                    pairs.push((row, self.grid.idx(i, j - 1)));
+                }
+                if j + 1 < n {
+                    pairs.push((row, self.grid.idx(i, j + 1)));
+                }
+            }
+        }
+        Sparsity::from_pattern(n * n, n * n, &pairs)
+    }
 }
 
 impl ProblemFamily for DarcyFamily {
@@ -88,7 +119,10 @@ impl ProblemFamily for DarcyFamily {
         let node = |i: usize, j: usize| k[(i + 1) * side + (j + 1)]; // interior (i,j) → node grid
         let harm = |a: f64, b: f64| 2.0 * a * b / (a + b);
 
-        let mut trips = Vec::with_capacity(5 * n * n);
+        // The stencil has no duplicate entries, so stamping values onto the
+        // shared pattern is bit-identical to a from_triplets assembly.
+        let sp = self.pattern.get_or_init(|| self.build_pattern());
+        let mut vals = vec![0.0; sp.nnz()];
         let mut b = vec![0.0; n * n];
         for i in 0..n {
             for j in 0..n {
@@ -102,23 +136,23 @@ impl ProblemFamily for DarcyFamily {
                 let tw = harm(kc, k[(i + 1) * side + j]);
                 let te = harm(kc, k[(i + 1) * side + (j + 2)]);
                 let diag = (tn + ts + tw + te) / h2;
-                trips.push((row, row, diag));
+                vals[sp.pos(row, row).unwrap()] = diag;
                 if i > 0 {
-                    trips.push((row, self.grid.idx(i - 1, j), -tn / h2));
+                    vals[sp.pos(row, self.grid.idx(i - 1, j)).unwrap()] = -tn / h2;
                 }
                 if i + 1 < n {
-                    trips.push((row, self.grid.idx(i + 1, j), -ts / h2));
+                    vals[sp.pos(row, self.grid.idx(i + 1, j)).unwrap()] = -ts / h2;
                 }
                 if j > 0 {
-                    trips.push((row, self.grid.idx(i, j - 1), -tw / h2));
+                    vals[sp.pos(row, self.grid.idx(i, j - 1)).unwrap()] = -tw / h2;
                 }
                 if j + 1 < n {
-                    trips.push((row, self.grid.idx(i, j + 1), -te / h2));
+                    vals[sp.pos(row, self.grid.idx(i, j + 1)).unwrap()] = -te / h2;
                 }
                 b[row] = 1.0; // f ≡ 1
             }
         }
-        let a = Csr::from_triplets(n * n, n * n, &trips);
+        let a = Csr::with_values(sp, vals)?;
         // Sort key: the coarse log-K field (the GRF parameters).
         let coarse = grf::resample(
             &k.iter().map(|v| v.ln()).collect::<Vec<_>>(),
@@ -187,5 +221,14 @@ mod tests {
         // Param grid is min(param_side, n+2)² values.
         let ps = fam.param_side.min(fam.grid.n + 2);
         assert_eq!(s1.params.len(), ps * ps);
+    }
+
+    #[test]
+    fn samples_share_one_sparsity() {
+        let fam = DarcyFamily::new(8);
+        let s1 = fam.sample(0, &mut Rng::new(1)).unwrap();
+        let s2 = fam.sample(1, &mut Rng::new(2)).unwrap();
+        assert!(std::sync::Arc::ptr_eq(s1.a.sparsity(), s2.a.sparsity()));
+        assert_ne!(s1.a.values(), s2.a.values());
     }
 }

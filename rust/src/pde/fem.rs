@@ -4,6 +4,7 @@
 //! Thermal problem (steady heat on an irregular domain, Figure 6).
 
 use crate::la::Csr;
+use crate::util::shared::SharedOnce;
 use anyhow::{bail, Result};
 
 /// A triangle mesh with boundary tags.
@@ -100,6 +101,20 @@ pub struct FemSystem {
 /// `g(group)` on tagged boundary nodes and natural (zero-flux) conditions
 /// elsewhere.
 pub fn assemble_laplace(mesh: &Mesh, g: &dyn Fn(u8) -> f64) -> Result<FemSystem> {
+    assemble_laplace_cached(mesh, g, None)
+}
+
+/// [`assemble_laplace`] with an optional stiffness cache. The stiffness
+/// matrix depends only on the mesh, never on `g`, so a per-family
+/// [`SharedOnce`] lets every sample after the first reuse the assembled `Csr`
+/// (one `Arc<Sparsity>`, cloned values) while the load vector and the
+/// degenerate-triangle checks still run per call — the returned system is
+/// bit-identical to an uncached assembly.
+pub fn assemble_laplace_cached(
+    mesh: &Mesh,
+    g: &dyn Fn(u8) -> f64,
+    cache: Option<&SharedOnce<Csr>>,
+) -> Result<FemSystem> {
     let nn = mesh.num_nodes();
     // Map node → interior index.
     let mut interior = Vec::new();
@@ -114,7 +129,10 @@ pub fn assemble_laplace(mesh: &Mesh, g: &dyn Fn(u8) -> f64) -> Result<FemSystem>
     if ni == 0 {
         bail!("mesh has no interior nodes");
     }
-    let mut trips: Vec<(usize, usize, f64)> = Vec::with_capacity(9 * mesh.tris.len());
+    let cached = cache.and_then(|c| c.get());
+    let need_matrix = cached.is_none();
+    let mut trips: Vec<(usize, usize, f64)> =
+        if need_matrix { Vec::with_capacity(9 * mesh.tris.len()) } else { Vec::new() };
     let mut b = vec![0.0; ni];
 
     for t in &mesh.tris {
@@ -134,14 +152,25 @@ pub fn assemble_laplace(mesh: &Mesh, g: &dyn Fn(u8) -> f64) -> Result<FemSystem>
                 let kij = coef * (bvec[i] * bvec[j] + cvec[i] * cvec[j]);
                 let (gi, gj) = (t[i], t[j]);
                 match (mesh.dirichlet[gi], mesh.dirichlet[gj]) {
-                    (None, None) => trips.push((imap[gi], imap[gj], kij)),
+                    (None, None) => {
+                        if need_matrix {
+                            trips.push((imap[gi], imap[gj], kij));
+                        }
+                    }
                     (None, Some(grp)) => b[imap[gi]] -= kij * g(grp),
                     _ => {} // row of a Dirichlet node: eliminated
                 }
             }
         }
     }
-    let a = Csr::from_triplets(ni, ni, &trips);
+    let a = match (cached, cache) {
+        (Some(hit), _) => (*hit).clone(),
+        (None, Some(c)) => {
+            let fresh = Csr::from_triplets(ni, ni, &trips);
+            (*c.get_or_init(|| fresh)).clone()
+        }
+        (None, None) => Csr::from_triplets(ni, ni, &trips),
+    };
     Ok(FemSystem { a, b, interior })
 }
 
@@ -182,6 +211,28 @@ mod tests {
         for &v in &x {
             assert!((v - 5.0).abs() < 1e-8, "{v}");
         }
+    }
+
+    #[test]
+    fn cached_assembly_is_bit_identical_and_shares_structure() {
+        let m = Mesh::annular_sector(8, 12, 0.15);
+        let cache = SharedOnce::new();
+        let g1 = |grp: u8| if grp == 0 { -3.0 } else { 7.0 };
+        let g2 = |grp: u8| if grp == 0 { 20.0 } else { -5.0 };
+        let fresh1 = assemble_laplace(&m, &g1).unwrap();
+        let fresh2 = assemble_laplace(&m, &g2).unwrap();
+        let c1 = assemble_laplace_cached(&m, &g1, Some(&cache)).unwrap();
+        let c2 = assemble_laplace_cached(&m, &g2, Some(&cache)).unwrap();
+        assert_eq!(fresh1.a, c1.a);
+        assert_eq!(fresh2.a, c2.a);
+        for (u, v) in fresh1.b.iter().zip(&c1.b) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        for (u, v) in fresh2.b.iter().zip(&c2.b) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        // Cache hits share one Arc<Sparsity>.
+        assert!(std::sync::Arc::ptr_eq(c1.a.sparsity(), c2.a.sparsity()));
     }
 
     #[test]

@@ -6,9 +6,10 @@
 use super::grf::{self, GrfConfig};
 use super::grid::Grid;
 use super::ProblemFamily;
-use crate::la::Csr;
+use crate::la::{Csr, Sparsity};
 use crate::solver::LinearSystem;
 use crate::util::prng::Rng;
+use crate::util::shared::SharedOnce;
 use anyhow::Result;
 
 /// Helmholtz problem generator.
@@ -22,6 +23,9 @@ pub struct HelmholtzFamily {
     pub grf: GrfConfig,
     /// Side of the coarse parameter grid (sort key).
     pub param_side: usize,
+    /// The 5-point stencil pattern, built once per (family, grid) and shared
+    /// by every sampled system — samples only stamp values onto it.
+    pattern: SharedOnce<Sparsity>,
 }
 
 impl HelmholtzFamily {
@@ -32,11 +36,38 @@ impl HelmholtzFamily {
             amplitude: 0.25,
             grf: GrfConfig::default(),
             param_side: 16,
+            pattern: SharedOnce::new(),
         }
     }
 
     pub fn with_unknowns(unknowns: usize) -> HelmholtzFamily {
         HelmholtzFamily::new(Grid::for_unknowns(unknowns).n)
+    }
+
+    /// Mirror of the stencil loop in [`ProblemFamily::sample`], positions
+    /// only: one (row, col) pair per nonzero.
+    fn build_pattern(&self) -> Sparsity {
+        let n = self.grid.n;
+        let mut pairs = Vec::with_capacity(5 * n * n);
+        for i in 0..n {
+            for j in 0..n {
+                let row = self.grid.idx(i, j);
+                pairs.push((row, row));
+                if i > 0 {
+                    pairs.push((row, self.grid.idx(i - 1, j)));
+                }
+                if i + 1 < n {
+                    pairs.push((row, self.grid.idx(i + 1, j)));
+                }
+                if j > 0 {
+                    pairs.push((row, self.grid.idx(i, j - 1)));
+                }
+                if j + 1 < n {
+                    pairs.push((row, self.grid.idx(i, j + 1)));
+                }
+            }
+        }
+        Sparsity::from_pattern(n * n, n * n, &pairs)
     }
 }
 
@@ -58,24 +89,27 @@ impl ProblemFamily for HelmholtzFamily {
         let field = grf::resample(&raw, p2, n);
         let kvals: Vec<f64> = field.iter().map(|v| self.k0 * (1.0 + self.amplitude * v)).collect();
 
-        let mut trips = Vec::with_capacity(5 * n * n);
+        // The stencil has no duplicate entries, so stamping values onto the
+        // shared pattern is bit-identical to a from_triplets assembly.
+        let sp = self.pattern.get_or_init(|| self.build_pattern());
+        let mut vals = vec![0.0; sp.nnz()];
         let mut b = vec![0.0; n * n];
         for i in 0..n {
             for j in 0..n {
                 let row = self.grid.idx(i, j);
                 let k2 = kvals[row] * kvals[row];
-                trips.push((row, row, -4.0 / h2 + k2));
+                vals[sp.pos(row, row).unwrap()] = -4.0 / h2 + k2;
                 if i > 0 {
-                    trips.push((row, self.grid.idx(i - 1, j), 1.0 / h2));
+                    vals[sp.pos(row, self.grid.idx(i - 1, j)).unwrap()] = 1.0 / h2;
                 }
                 if i + 1 < n {
-                    trips.push((row, self.grid.idx(i + 1, j), 1.0 / h2));
+                    vals[sp.pos(row, self.grid.idx(i + 1, j)).unwrap()] = 1.0 / h2;
                 }
                 if j > 0 {
-                    trips.push((row, self.grid.idx(i, j - 1), 1.0 / h2));
+                    vals[sp.pos(row, self.grid.idx(i, j - 1)).unwrap()] = 1.0 / h2;
                 }
                 if j + 1 < n {
-                    trips.push((row, self.grid.idx(i, j + 1), 1.0 / h2));
+                    vals[sp.pos(row, self.grid.idx(i, j + 1)).unwrap()] = 1.0 / h2;
                 }
                 // Point-source forcing: localized Gaussian beam, fixed across
                 // samples (the variation lives in k).
@@ -84,7 +118,7 @@ impl ProblemFamily for HelmholtzFamily {
                 b[row] = (-d2 / 0.01).exp();
             }
         }
-        let a = Csr::from_triplets(n * n, n * n, &trips);
+        let a = Csr::with_values(sp, vals)?;
         let coarse = grf::resample(&kvals, n, self.param_side.min(n));
         Ok(LinearSystem { id, a, b, params: coarse })
     }
@@ -140,5 +174,14 @@ mod tests {
         for &k in &sys.params {
             assert!(k > 0.0 && k < 2.5 * fam.k0);
         }
+    }
+
+    #[test]
+    fn samples_share_one_sparsity() {
+        let fam = HelmholtzFamily::new(10);
+        let s1 = fam.sample(0, &mut Rng::new(1)).unwrap();
+        let s2 = fam.sample(1, &mut Rng::new(2)).unwrap();
+        assert!(std::sync::Arc::ptr_eq(s1.a.sparsity(), s2.a.sparsity()));
+        assert_ne!(s1.a.values(), s2.a.values());
     }
 }

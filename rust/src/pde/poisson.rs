@@ -8,6 +8,7 @@ use super::ProblemFamily;
 use crate::la::Csr;
 use crate::solver::LinearSystem;
 use crate::util::prng::Rng;
+use crate::util::shared::SharedOnce;
 use anyhow::Result;
 
 /// Poisson problem generator.
@@ -16,11 +17,19 @@ pub struct PoissonFamily {
     grid: Grid,
     /// Chebyshev truncation degree for the five series.
     pub degree: usize,
+    /// The operator is parameter-independent: assembled once, then cloned —
+    /// every sampled system shares one `Arc<Sparsity>` (the value vector is
+    /// cloned, keeping `Csr`'s value-ownership semantics).
+    laplacian_cache: SharedOnce<Csr>,
 }
 
 impl PoissonFamily {
     pub fn new(interior_side: usize) -> PoissonFamily {
-        PoissonFamily { grid: Grid::new(interior_side), degree: 8 }
+        PoissonFamily {
+            grid: Grid::new(interior_side),
+            degree: 8,
+            laplacian_cache: SharedOnce::new(),
+        }
     }
 
     pub fn with_unknowns(unknowns: usize) -> PoissonFamily {
@@ -29,6 +38,10 @@ impl PoissonFamily {
 
     /// The (constant-in-parameters) 5-point Laplacian.
     fn laplacian(&self) -> Csr {
+        (*self.laplacian_cache.get_or_init(|| self.build_laplacian())).clone()
+    }
+
+    fn build_laplacian(&self) -> Csr {
         let n = self.grid.n;
         let h2 = self.grid.h * self.grid.h * 4.0; // domain [-1,1] ⇒ spacing 2h
         let mut trips = Vec::with_capacity(5 * n * n);
@@ -184,5 +197,7 @@ mod tests {
         let s2 = fam.sample(1, &mut Rng::new(2)).unwrap();
         assert_eq!(s1.a, s2.a);
         assert_ne!(s1.b, s2.b);
+        // The cached operator hands every sample the same Arc<Sparsity>.
+        assert!(std::sync::Arc::ptr_eq(s1.a.sparsity(), s2.a.sparsity()));
     }
 }

@@ -3,10 +3,12 @@
 //! boundary temperatures are uniform random values in [−100, 0] and
 //! [0, 100]; those two values are the sort key.
 
-use super::fem::{assemble_laplace, Mesh};
+use super::fem::{assemble_laplace_cached, Mesh};
 use super::ProblemFamily;
+use crate::la::Csr;
 use crate::solver::LinearSystem;
 use crate::util::prng::Rng;
+use crate::util::shared::SharedOnce;
 use anyhow::Result;
 
 /// Thermal problem generator (FEM on a fixed irregular mesh; the boundary
@@ -14,6 +16,10 @@ use anyhow::Result;
 pub struct ThermalFamily {
     mesh: Mesh,
     unknowns: usize,
+    /// The stiffness matrix depends only on the mesh: assembled once, then
+    /// every sample clones it (one shared `Arc<Sparsity>`) and rebuilds only
+    /// the Dirichlet-lift load vector.
+    stiffness: SharedOnce<Csr>,
 }
 
 impl ThermalFamily {
@@ -24,7 +30,7 @@ impl ThermalFamily {
         // iterations unpreconditioned).
         let mesh = Mesh::annular_sector_graded(nr, nth, 0.3, 2.5);
         let unknowns = mesh.num_interior();
-        ThermalFamily { mesh, unknowns }
+        ThermalFamily { mesh, unknowns, stiffness: SharedOnce::new() }
     }
 
     /// Pick (nr, nth) with interior count close to `unknowns`
@@ -58,7 +64,11 @@ impl ProblemFamily for ThermalFamily {
     fn sample(&self, id: usize, rng: &mut Rng) -> Result<LinearSystem> {
         let t_inner = rng.uniform_in(-100.0, 0.0);
         let t_outer = rng.uniform_in(0.0, 100.0);
-        let sys = assemble_laplace(&self.mesh, &move |grp| if grp == 0 { t_inner } else { t_outer })?;
+        let sys = assemble_laplace_cached(
+            &self.mesh,
+            &move |grp| if grp == 0 { t_inner } else { t_outer },
+            Some(&self.stiffness),
+        )?;
         Ok(LinearSystem { id, a: sys.a, b: sys.b, params: vec![t_inner, t_outer] })
     }
 
@@ -98,6 +108,16 @@ mod tests {
         for &v in &x {
             assert!(v >= tin - 1e-6 && v <= tout + 1e-6, "{v} outside [{tin},{tout}]");
         }
+    }
+
+    #[test]
+    fn samples_share_one_stiffness_sparsity() {
+        let fam = ThermalFamily::new(6, 12);
+        let s1 = fam.sample(0, &mut Rng::new(1)).unwrap();
+        let s2 = fam.sample(1, &mut Rng::new(2)).unwrap();
+        assert!(std::sync::Arc::ptr_eq(s1.a.sparsity(), s2.a.sparsity()));
+        assert_eq!(s1.a, s2.a); // stiffness is g-independent
+        assert_ne!(s1.b, s2.b); // the lift is not
     }
 
     #[test]

@@ -4,10 +4,18 @@
 //! submatrix is solved by a local ILU(0). We use the *restricted* additive
 //! Schwarz update (solve on the overlapped domain, write back only the owned
 //! rows) — PETSc's default, which avoids double-counting in the overlap.
+//!
+//! The subdomain index maps (block ranges, local sparsity patterns, and the
+//! scatter from A's value array into each local submatrix) are all functions
+//! of the shared [`Sparsity`], so they live in [`AsmSymbolic`] and are built
+//! once per structure; `refactor` only stamps values and re-runs the local
+//! numeric ILU(0) sweeps.
 
+use super::ilu0::IluSymbolic;
 use super::{Ilu0, Preconditioner};
-use crate::la::Csr;
+use crate::la::{Csr, Sparsity};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Restricted additive Schwarz with local ILU(0) solves.
 pub struct Asm {
@@ -21,9 +29,28 @@ pub struct Asm {
     max_len: usize,
 }
 
-impl Asm {
-    pub fn new(a: &Csr, nblocks: usize, overlap: usize) -> Result<Asm> {
-        let n = a.nrows();
+/// One subdomain's structural data: local pattern, the scatter from A's
+/// value array (`usize::MAX` marks an inserted unit diagonal), and the local
+/// ILU(0) symbolic phase.
+#[derive(Debug, Clone)]
+struct AsmBlock {
+    sparsity: Arc<Sparsity>,
+    stamp: Vec<usize>,
+    ilu: IluSymbolic,
+}
+
+/// Structural half of ASM, reusable across every system with this sparsity.
+#[derive(Debug, Clone)]
+pub struct AsmSymbolic {
+    owned: Vec<(usize, usize)>,
+    extended: Vec<(usize, usize)>,
+    max_len: usize,
+    blocks: Vec<AsmBlock>,
+}
+
+impl AsmSymbolic {
+    pub fn new(sp: &Sparsity, nblocks: usize, overlap: usize) -> Result<AsmSymbolic> {
+        let n = sp.nrows();
         let nblocks = nblocks.clamp(1, n.max(1));
         let base = n / nblocks;
         let rem = n % nblocks;
@@ -35,34 +62,70 @@ impl Asm {
             start += len;
         }
         let mut extended = Vec::with_capacity(nblocks);
-        let mut locals = Vec::with_capacity(nblocks);
+        let mut blocks = Vec::with_capacity(nblocks);
         let mut max_len = 0;
         for &(s, e) in &owned {
             let xs = s.saturating_sub(overlap);
             let xe = (e + overlap).min(n);
             extended.push((xs, xe));
             max_len = max_len.max(xe - xs);
-            // Extract the local principal submatrix on [xs, xe).
-            let mut trips = Vec::new();
+            // Local principal submatrix pattern on [xs, xe), with a unit
+            // diagonal inserted where the global row has none locally.
+            let mut pattern = Vec::new();
+            let mut sources = Vec::new();
             for i in xs..xe {
-                let (cols, vals) = a.row(i);
                 let mut has_diag = false;
-                for (&c, &v) in cols.iter().zip(vals) {
+                for k in sp.row_range(i) {
+                    let c = sp.col_idx[k];
                     if c >= xs && c < xe {
-                        trips.push((i - xs, c - xs, v));
+                        pattern.push((i - xs, c - xs));
+                        sources.push((i - xs, c - xs, k));
                         if c == i {
                             has_diag = true;
                         }
                     }
                 }
                 if !has_diag {
-                    trips.push((i - xs, i - xs, 1.0));
+                    pattern.push((i - xs, i - xs));
+                    sources.push((i - xs, i - xs, usize::MAX));
                 }
             }
-            let local = Csr::from_triplets(xe - xs, xe - xs, &trips);
-            locals.push(Ilu0::new(&local)?);
+            let local = Arc::new(Sparsity::from_pattern(xe - xs, xe - xs, &pattern));
+            let mut stamp = vec![usize::MAX; local.nnz()];
+            for &(lr, lc, src) in &sources {
+                stamp[local.pos(lr, lc).unwrap()] = src;
+            }
+            let ilu = IluSymbolic::new(&local)?;
+            blocks.push(AsmBlock { sparsity: local, stamp, ilu });
         }
-        Ok(Asm { owned, extended, locals, max_len })
+        Ok(AsmSymbolic { owned, extended, max_len, blocks })
+    }
+
+    /// Numeric rebuild: stamp each subdomain's values and rerun local ILU(0).
+    pub fn refactor(&self, a: &Csr) -> Result<Asm> {
+        let avals = a.values();
+        let mut locals = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            let vals: Vec<f64> = blk
+                .stamp
+                .iter()
+                .map(|&s| if s == usize::MAX { 1.0 } else { avals[s] })
+                .collect();
+            let local = Csr::with_values(blk.sparsity.clone(), vals)?;
+            locals.push(blk.ilu.refactor(&local)?);
+        }
+        Ok(Asm {
+            owned: self.owned.clone(),
+            extended: self.extended.clone(),
+            locals,
+            max_len: self.max_len,
+        })
+    }
+}
+
+impl Asm {
+    pub fn new(a: &Csr, nblocks: usize, overlap: usize) -> Result<Asm> {
+        AsmSymbolic::new(a.sparsity(), nblocks, overlap)?.refactor(a)
     }
 }
 
@@ -134,5 +197,23 @@ mod tests {
             }
         }
         assert!(covered.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn symbolic_refactor_matches_fresh_build() {
+        let a = lap1d(40);
+        let sym = AsmSymbolic::new(a.sparsity(), 4, 2).unwrap();
+        for shift in [0.0, 0.5] {
+            let b = a.add_diag(shift);
+            let fresh = Asm::new(&b, 4, 2).unwrap();
+            let reused = sym.refactor(&b).unwrap();
+            let r: Vec<f64> = (0..40).map(|i| (i as f64 * 0.7).cos()).collect();
+            let (mut z1, mut z2) = (vec![0.0; 40], vec![0.0; 40]);
+            fresh.apply(&r, &mut z1);
+            reused.apply(&r, &mut z2);
+            for (u, v) in z1.iter().zip(&z2) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
     }
 }

@@ -1,8 +1,13 @@
 //! Block-Jacobi preconditioner: contiguous row blocks, each solved exactly
 //! by a dense LU factored at setup.
+//!
+//! The block layout and the scatter from A's value array into each dense
+//! block are functions of the shared [`Sparsity`] and live in
+//! [`BjSymbolic`]; `refactor` stamps values and reruns the dense LU per
+//! system.
 
 use super::Preconditioner;
-use crate::la::{Csr, Mat};
+use crate::la::{Csr, Mat, Sparsity};
 use anyhow::{bail, Result};
 
 /// Per-block dense LU factors (PA = LU compact storage) for contiguous
@@ -76,10 +81,17 @@ impl LuFactor {
     }
 }
 
-impl BlockJacobi {
-    /// Split `a` into `nblocks` contiguous row blocks.
-    pub fn new(a: &Csr, nblocks: usize) -> Result<BlockJacobi> {
-        let n = a.nrows();
+/// Structural half of block-Jacobi: block ranges plus, per block, the
+/// (dense row, dense col, A value index) scatter triples.
+#[derive(Debug, Clone)]
+pub struct BjSymbolic {
+    ranges: Vec<(usize, usize)>,
+    scatter: Vec<Vec<(usize, usize, usize)>>,
+}
+
+impl BjSymbolic {
+    pub fn new(sp: &Sparsity, nblocks: usize) -> BjSymbolic {
+        let n = sp.nrows();
         let nblocks = nblocks.clamp(1, n.max(1));
         let mut ranges = Vec::with_capacity(nblocks);
         let base = n / nblocks;
@@ -90,21 +102,42 @@ impl BlockJacobi {
             ranges.push((start, start + len));
             start += len;
         }
-        let mut factors = Vec::with_capacity(nblocks);
+        let mut scatter = Vec::with_capacity(nblocks);
         for &(s, e) in &ranges {
-            let len = e - s;
-            let mut block = Mat::zeros(len, len);
+            let mut triples = Vec::new();
             for i in s..e {
-                let (cols, vals) = a.row(i);
-                for (&c, &v) in cols.iter().zip(vals) {
+                for k in sp.row_range(i) {
+                    let c = sp.col_idx[k];
                     if c >= s && c < e {
-                        block[(i - s, c - s)] = v;
+                        triples.push((i - s, c - s, k));
                     }
                 }
             }
+            scatter.push(triples);
+        }
+        BjSymbolic { ranges, scatter }
+    }
+
+    /// Numeric rebuild: stamp each dense block and refactor its LU.
+    pub fn refactor(&self, a: &Csr) -> Result<BlockJacobi> {
+        let avals = a.values();
+        let mut factors = Vec::with_capacity(self.ranges.len());
+        for (&(s, e), triples) in self.ranges.iter().zip(&self.scatter) {
+            let len = e - s;
+            let mut block = Mat::zeros(len, len);
+            for &(br, bc, src) in triples {
+                block[(br, bc)] = avals[src];
+            }
             factors.push(LuFactor::new(block)?);
         }
-        Ok(BlockJacobi { ranges, factors })
+        Ok(BlockJacobi { ranges: self.ranges.clone(), factors })
+    }
+}
+
+impl BlockJacobi {
+    /// Split `a` into `nblocks` contiguous row blocks.
+    pub fn new(a: &Csr, nblocks: usize) -> Result<BlockJacobi> {
+        BjSymbolic::new(a.sparsity(), nblocks).refactor(a)
     }
 }
 
@@ -157,5 +190,21 @@ mod tests {
         let a = lap1d(3);
         let p = BlockJacobi::new(&a, 100).unwrap();
         assert_eq!(p.ranges.len(), 3);
+    }
+
+    #[test]
+    fn symbolic_refactor_matches_fresh_build() {
+        let a = nonsym(30);
+        let sym = BjSymbolic::new(a.sparsity(), 6);
+        let b = a.add_diag(0.75);
+        let fresh = BlockJacobi::new(&b, 6).unwrap();
+        let reused = sym.refactor(&b).unwrap();
+        let r: Vec<f64> = (0..30).map(|i| (i as f64 * 0.3).sin()).collect();
+        let (mut z1, mut z2) = (vec![0.0; 30], vec![0.0; 30]);
+        fresh.apply(&r, &mut z1);
+        reused.apply(&r, &mut z2);
+        for (u, v) in z1.iter().zip(&z2) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
     }
 }

@@ -5,10 +5,16 @@
 //! nonsymmetric input we factor the symmetric part ½(A+Aᵀ), with a diagonal
 //! shift escalated until the incomplete factorization succeeds — the same
 //! `shift` strategy PETSc's `icc` uses. See DESIGN.md §Substitutions.
+//!
+//! The factorization splits into [`IccSymbolic`] (the lower-triangle pattern,
+//! its diagonal positions, and a map from lower entries back into A's value
+//! array — all functions of the shared [`Sparsity`]) and a numeric phase that
+//! stamps values and runs the IC(0) sweep per system.
 
 use super::Preconditioner;
-use crate::la::Csr;
+use crate::la::{Csr, Sparsity};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// ICC(0) factor L (lower triangular, same pattern as tril(A)); apply solves
 /// L Lᵀ z = r.
@@ -19,16 +25,73 @@ pub struct Icc0 {
     diag_pos: Vec<usize>,
 }
 
-impl Icc0 {
-    pub fn new(a: &Csr) -> Result<Icc0> {
-        let sym = if a.asymmetry() > 1e-12 { a.symmetric_part() } else { a.clone() };
+/// Structural half of ICC(0), reusable across every system with the same
+/// sparsity (for the symmetric fast path; value-asymmetric systems fall back
+/// to factoring ½(A+Aᵀ) from scratch).
+#[derive(Debug, Clone)]
+pub struct IccSymbolic {
+    sparsity: Arc<Sparsity>,
+    /// Pattern of tril(A) including the diagonal.
+    lower: Arc<Sparsity>,
+    /// Diagonal position within each row of `lower`.
+    diag_pos: Vec<usize>,
+    /// For each `lower` entry, its position in A's value array.
+    src: Vec<usize>,
+}
+
+impl IccSymbolic {
+    pub fn new(sparsity: &Arc<Sparsity>) -> Result<IccSymbolic> {
+        let n = sparsity.nrows();
+        let mut row_ptr = vec![0usize; n + 1];
+        let mut col_idx = Vec::new();
+        let mut src = Vec::new();
+        for i in 0..n {
+            let mut has_diag = false;
+            for k in sparsity.row_range(i) {
+                let c = sparsity.col_idx[k];
+                if c > i {
+                    break;
+                }
+                col_idx.push(c);
+                src.push(k);
+                if c == i {
+                    has_diag = true;
+                }
+            }
+            if !has_diag {
+                bail!("ICC0: structurally zero diagonal at row {i}");
+            }
+            row_ptr[i + 1] = col_idx.len();
+        }
+        let lower = Arc::new(Sparsity::from_parts(n, n, row_ptr, col_idx));
+        let diag_pos: Vec<usize> = (0..n).map(|i| lower.diag_pos(i).unwrap()).collect();
+        Ok(IccSymbolic { sparsity: sparsity.clone(), lower, diag_pos, src })
+    }
+
+    /// Numeric factorization of `a` on the precomputed structure, with the
+    /// same shift-escalation and symmetric-part fallback as a fresh build.
+    pub fn refactor(&self, a: &Csr) -> Result<Icc0> {
+        if a.asymmetry() > 1e-12 {
+            let sym = a.symmetric_part();
+            let symbolic = IccSymbolic::new(sym.sparsity())?;
+            return symbolic.attempt_loop(sym.values());
+        }
+        debug_assert!(
+            Arc::ptr_eq(&self.sparsity, a.sparsity()) || *self.sparsity == **a.sparsity(),
+            "ICC0 refactor: sparsity mismatch"
+        );
+        self.attempt_loop(a.values())
+    }
+
+    fn attempt_loop(&self, avals: &[f64]) -> Result<Icc0> {
         let mut shift = 0.0;
         for attempt in 0..8 {
-            match Self::factor(&sym, shift) {
+            match self.factor_values(avals, shift) {
                 Ok(icc) => return Ok(icc),
                 Err(_) if attempt < 7 => {
                     // escalate the Manteuffel shift
-                    let base = sym.diag().iter().fold(0.0f64, |m, d| m.max(d.abs()));
+                    let base =
+                        self.diag_pos.iter().fold(0.0f64, |m, &dp| m.max(avals[self.src[dp]].abs()));
                     shift = if shift == 0.0 { 1e-3 * base } else { shift * 4.0 };
                 }
                 Err(e) => return Err(e),
@@ -37,48 +100,32 @@ impl Icc0 {
         unreachable!()
     }
 
-    fn factor(a: &Csr, shift: f64) -> Result<Icc0> {
-        let n = a.nrows();
-        // Extract the lower triangle (including diagonal, shifted).
-        let mut trips = Vec::new();
-        for i in 0..n {
-            let (cols, vals) = a.row(i);
-            for (&c, &v) in cols.iter().zip(vals) {
-                if c < i {
-                    trips.push((i, c, v));
-                } else if c == i {
-                    trips.push((i, c, v + shift));
-                }
-            }
+    fn factor_values(&self, avals: &[f64], shift: f64) -> Result<Icc0> {
+        let n = self.lower.nrows();
+        // Stamp tril(A) values (diagonal shifted) onto the lower pattern.
+        let mut vals: Vec<f64> = self.src.iter().map(|&k| avals[k]).collect();
+        for &dp in &self.diag_pos {
+            vals[dp] += shift;
         }
-        let mut l = Csr::from_triplets(n, n, &trips);
-        let mut diag_pos = vec![usize::MAX; n];
-        for i in 0..n {
-            for k in l.row_ptr[i]..l.row_ptr[i + 1] {
-                if l.col_idx[k] == i {
-                    diag_pos[i] = k;
-                }
-            }
-            if diag_pos[i] == usize::MAX {
-                bail!("ICC0: structurally zero diagonal at row {i}");
-            }
-        }
+        let row_ptr = &self.lower.row_ptr;
+        let col_idx = &self.lower.col_idx;
+        let diag_pos = &self.diag_pos;
         // Row-oriented incomplete Cholesky restricted to the pattern:
         // for each row i: L[i,j] = (A[i,j] - Σ_k<j L[i,k] L[j,k]) / L[j,j],
         // L[i,i] = sqrt(A[i,i] - Σ_k<i L[i,k]²).
         for i in 0..n {
-            let (start, end) = (l.row_ptr[i], l.row_ptr[i + 1]);
+            let (start, end) = (row_ptr[i], row_ptr[i + 1]);
             for kk in start..end {
-                let j = l.col_idx[kk];
+                let j = col_idx[kk];
                 // dot of row i and row j over columns < j (pattern-restricted)
-                let mut s = l.vals[kk];
+                let mut s = vals[kk];
                 {
-                    let (mut p, mut q) = (start, l.row_ptr[j]);
+                    let (mut p, mut q) = (start, row_ptr[j]);
                     let (pend, qend) = (kk, diag_pos[j]);
                     while p < pend && q < qend {
-                        let (ci, cj) = (l.col_idx[p], l.col_idx[q]);
+                        let (ci, cj) = (col_idx[p], col_idx[q]);
                         if ci == cj {
-                            s -= l.vals[p] * l.vals[q];
+                            s -= vals[p] * vals[q];
                             p += 1;
                             q += 1;
                         } else if ci < cj {
@@ -92,38 +139,48 @@ impl Icc0 {
                     if s <= 0.0 {
                         bail!("ICC0: negative pivot at row {i} (s={s})");
                     }
-                    l.vals[kk] = s.sqrt();
+                    vals[kk] = s.sqrt();
                 } else {
-                    let ljj = l.vals[diag_pos[j]];
-                    l.vals[kk] = s / ljj;
+                    let ljj = vals[diag_pos[j]];
+                    vals[kk] = s / ljj;
                 }
             }
         }
-        Ok(Icc0 { l, diag_pos })
+        let l = Csr::with_values(self.lower.clone(), vals)?;
+        Ok(Icc0 { l, diag_pos: self.diag_pos.clone() })
+    }
+}
+
+impl Icc0 {
+    pub fn new(a: &Csr) -> Result<Icc0> {
+        IccSymbolic::new(a.sparsity())?.refactor(a)
     }
 }
 
 impl Preconditioner for Icc0 {
     fn apply(&self, r: &[f64], z: &mut [f64]) {
         let n = r.len();
+        let row_ptr = self.l.row_offsets();
+        let col_idx = self.l.col_indices();
+        let vals = self.l.values();
         // Forward solve L y = r.
         for i in 0..n {
-            let start = self.l.row_ptr[i];
+            let start = row_ptr[i];
             let dp = self.diag_pos[i];
             let mut s = r[i];
             for k in start..dp {
-                s -= self.l.vals[k] * z[self.l.col_idx[k]];
+                s -= vals[k] * z[col_idx[k]];
             }
-            z[i] = s / self.l.vals[dp];
+            z[i] = s / vals[dp];
         }
         // Backward solve Lᵀ z = y (column sweep on L).
         for i in (0..n).rev() {
             let dp = self.diag_pos[i];
-            z[i] /= self.l.vals[dp];
-            let start = self.l.row_ptr[i];
+            z[i] /= vals[dp];
+            let start = row_ptr[i];
             let zi = z[i];
             for k in start..dp {
-                z[self.l.col_idx[k]] -= self.l.vals[k] * zi;
+                z[col_idx[k]] -= vals[k] * zi;
             }
         }
     }
@@ -176,5 +233,23 @@ mod tests {
         let lhs = crate::la::dot(&mu, &v);
         let rhs = crate::la::dot(&u, &mv);
         assert!((lhs - rhs).abs() < 1e-10 * lhs.abs().max(1.0));
+    }
+
+    #[test]
+    fn symbolic_refactor_matches_fresh_build() {
+        let a = lap1d(20);
+        let sym = IccSymbolic::new(a.sparsity()).unwrap();
+        for shift in [0.0, 0.25, 2.0] {
+            let b = a.add_diag(shift);
+            let fresh = Icc0::new(&b).unwrap();
+            let reused = sym.refactor(&b).unwrap();
+            let r: Vec<f64> = (0..20).map(|i| (i as f64).sin()).collect();
+            let (mut z1, mut z2) = (vec![0.0; 20], vec![0.0; 20]);
+            fresh.apply(&r, &mut z1);
+            reused.apply(&r, &mut z2);
+            for (u, v) in z1.iter().zip(&z2) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
     }
 }

@@ -1,9 +1,15 @@
 //! ILU(0): incomplete LU factorization with zero fill-in, IKJ variant on the
 //! CSR pattern of A. L is unit lower triangular; L and U share A's sparsity.
+//!
+//! The factorization is split into a symbolic phase ([`IluSymbolic`]: diagonal
+//! positions, keyed on the shared [`Sparsity`]) and a numeric phase
+//! (`refactor`: the IKJ sweep over fresh values) so a sorted sequence of
+//! same-structure systems pays for the structural analysis once.
 
 use super::Preconditioner;
-use crate::la::Csr;
+use crate::la::{Csr, Sparsity};
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// ILU(0) factors stored in a single CSR copy of A's pattern
 /// (strict lower = L without unit diagonal, diagonal+upper = U).
@@ -14,44 +20,61 @@ pub struct Ilu0 {
     diag_pos: Vec<usize>,
 }
 
-impl Ilu0 {
-    pub fn new(a: &Csr) -> Result<Ilu0> {
-        let n = a.nrows();
-        let mut lu = a.clone();
+/// Structural half of ILU(0): the shared pattern plus per-row diagonal
+/// positions, reusable across every system with this sparsity.
+#[derive(Debug, Clone)]
+pub struct IluSymbolic {
+    sparsity: Arc<Sparsity>,
+    diag_pos: Vec<usize>,
+}
+
+impl IluSymbolic {
+    pub fn new(sparsity: &Arc<Sparsity>) -> Result<IluSymbolic> {
+        let n = sparsity.nrows();
         let mut diag_pos = vec![usize::MAX; n];
-        for i in 0..n {
-            let (start, end) = (lu.row_ptr[i], lu.row_ptr[i + 1]);
-            for k in start..end {
-                if lu.col_idx[k] == i {
-                    diag_pos[i] = k;
-                }
-            }
-            if diag_pos[i] == usize::MAX {
-                bail!("ILU0: structurally zero diagonal at row {i}");
+        for (i, dp) in diag_pos.iter_mut().enumerate() {
+            match sparsity.diag_pos(i) {
+                Some(p) => *dp = p,
+                None => bail!("ILU0: structurally zero diagonal at row {i}"),
             }
         }
+        Ok(IluSymbolic { sparsity: sparsity.clone(), diag_pos })
+    }
+
+    /// Numeric factorization of `a` on the precomputed structure.
+    pub fn refactor(&self, a: &Csr) -> Result<Ilu0> {
+        debug_assert!(
+            Arc::ptr_eq(&self.sparsity, a.sparsity()) || *self.sparsity == **a.sparsity(),
+            "ILU0 refactor: sparsity mismatch"
+        );
+        let n = a.nrows();
+        let diag_pos = &self.diag_pos;
+        let mut lu = a.clone();
+        let (sp, vals) = lu.parts_mut();
+        let row_ptr = &sp.row_ptr;
+        let col_idx = &sp.col_idx;
         // IKJ factorization restricted to the pattern.
         for i in 1..n {
-            let (start, end) = (lu.row_ptr[i], lu.row_ptr[i + 1]);
+            let (start, end) = (row_ptr[i], row_ptr[i + 1]);
             for kk in start..end {
-                let k = lu.col_idx[kk];
+                let k = col_idx[kk];
                 if k >= i {
                     break;
                 }
-                let ukk = lu.vals[diag_pos[k]];
+                let ukk = vals[diag_pos[k]];
                 if ukk == 0.0 {
                     bail!("ILU0: zero pivot at row {k}");
                 }
-                let lik = lu.vals[kk] / ukk;
-                lu.vals[kk] = lik;
+                let lik = vals[kk] / ukk;
+                vals[kk] = lik;
                 // Subtract lik * U[k, j] for j > k within row i's pattern.
-                let krow_end = lu.row_ptr[k + 1];
+                let krow_end = row_ptr[k + 1];
                 let mut p = kk + 1;
                 let mut q = diag_pos[k] + 1;
                 while p < end && q < krow_end {
-                    let (ci, ck) = (lu.col_idx[p], lu.col_idx[q]);
+                    let (ci, ck) = (col_idx[p], col_idx[q]);
                     if ci == ck {
-                        lu.vals[p] -= lik * lu.vals[q];
+                        vals[p] -= lik * vals[q];
                         p += 1;
                         q += 1;
                     } else if ci < ck {
@@ -61,34 +84,43 @@ impl Ilu0 {
                     }
                 }
             }
-            if lu.vals[diag_pos[i]] == 0.0 {
+            if vals[diag_pos[i]] == 0.0 {
                 bail!("ILU0: zero pivot produced at row {i}");
             }
         }
-        Ok(Ilu0 { lu, diag_pos })
+        Ok(Ilu0 { lu, diag_pos: self.diag_pos.clone() })
+    }
+}
+
+impl Ilu0 {
+    pub fn new(a: &Csr) -> Result<Ilu0> {
+        IluSymbolic::new(a.sparsity())?.refactor(a)
     }
 
     /// Solve L y = r (unit lower), then U z = y, into `z`.
     pub fn solve_into(&self, r: &[f64], z: &mut [f64]) {
         let n = r.len();
+        let row_ptr = self.lu.row_offsets();
+        let col_idx = self.lu.col_indices();
+        let vals = self.lu.values();
         // Forward: y overwrites z.
         for i in 0..n {
-            let (start, _end) = (self.lu.row_ptr[i], self.lu.row_ptr[i + 1]);
+            let start = row_ptr[i];
             let mut s = r[i];
             for k in start..self.diag_pos[i] {
-                s -= self.lu.vals[k] * z[self.lu.col_idx[k]];
+                s -= vals[k] * z[col_idx[k]];
             }
             z[i] = s;
         }
         // Backward.
         for i in (0..n).rev() {
-            let end = self.lu.row_ptr[i + 1];
+            let end = row_ptr[i + 1];
             let dp = self.diag_pos[i];
             let mut s = z[i];
             for k in dp + 1..end {
-                s -= self.lu.vals[k] * z[self.lu.col_idx[k]];
+                s -= vals[k] * z[col_idx[k]];
             }
-            z[i] = s / self.lu.vals[dp];
+            z[i] = s / vals[dp];
         }
     }
 }
@@ -140,5 +172,23 @@ mod tests {
     fn rejects_missing_diagonal() {
         let a = Csr::from_triplets(2, 2, &[(0, 1, 1.0), (1, 0, 1.0)]);
         assert!(Ilu0::new(&a).is_err());
+    }
+
+    #[test]
+    fn symbolic_refactor_matches_fresh_build() {
+        let a = nonsym(24);
+        let sym = IluSymbolic::new(a.sparsity()).unwrap();
+        for shift in [0.0, 0.125, 1.5] {
+            let b = a.add_diag(shift);
+            let fresh = Ilu0::new(&b).unwrap();
+            let reused = sym.refactor(&b).unwrap();
+            let r: Vec<f64> = (0..24).map(|i| (i as f64).sin()).collect();
+            let (mut z1, mut z2) = (vec![0.0; 24], vec![0.0; 24]);
+            fresh.apply(&r, &mut z1);
+            reused.apply(&r, &mut z2);
+            for (u, v) in z1.iter().zip(&z2) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
     }
 }

@@ -5,6 +5,13 @@
 //! All are used as **right** preconditioners: the solvers iterate on
 //! A M⁻¹ y = b, x = M⁻¹ y, matching PETSc's default side for GMRES in the
 //! paper's setup.
+//!
+//! Construction is two-phase: [`PrecondKind::symbolic`] analyses the shared
+//! [`Sparsity`] once (ILU0/ICC0 fill positions, ASM subdomain maps,
+//! BlockJacobi block layout) and [`SymbolicPrecond::refactor`] stamps one
+//! system's values — the sequence drivers cache the symbolic phase across a
+//! sorted shard. [`PrecondKind::build`] composes the two, so fresh builds
+//! and cached reuse share a single code path and are bit-identical.
 
 mod asm;
 mod bjacobi;
@@ -14,16 +21,17 @@ mod ilu0;
 mod jacobi;
 mod sor;
 
-pub use asm::Asm;
-pub use bjacobi::BlockJacobi;
-pub use icc0::Icc0;
+pub use asm::{Asm, AsmSymbolic};
+pub use bjacobi::{BjSymbolic, BlockJacobi};
+pub use icc0::{Icc0, IccSymbolic};
 pub use identity::Identity;
-pub use ilu0::Ilu0;
+pub use ilu0::{Ilu0, IluSymbolic};
 pub use jacobi::Jacobi;
 pub use sor::Sor;
 
-use crate::la::Csr;
+use crate::la::{Csr, Sparsity};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// A preconditioner application z = M⁻¹ r.
 pub trait Preconditioner: Send + Sync {
@@ -82,16 +90,80 @@ impl PrecondKind {
         }
     }
 
-    /// Construct the preconditioner for a given matrix.
+    /// Symbolic phase keyed on the shared structure: fill positions, index
+    /// maps and block layouts that every same-sparsity system reuses.
+    pub fn symbolic(&self, sparsity: &Arc<Sparsity>) -> Result<SymbolicPrecond> {
+        let n = sparsity.nrows();
+        let inner = match self {
+            PrecondKind::None => Symbolic::None,
+            PrecondKind::Jacobi => Symbolic::Jacobi,
+            PrecondKind::BJacobi => Symbolic::BJacobi(BjSymbolic::new(sparsity, default_blocks(n))),
+            PrecondKind::Sor => Symbolic::Sor,
+            PrecondKind::Asm => {
+                Symbolic::Asm(AsmSymbolic::new(sparsity, default_blocks(n), overlap_for(n))?)
+            }
+            PrecondKind::Icc => Symbolic::Icc(IccSymbolic::new(sparsity)?),
+            PrecondKind::Ilu => Symbolic::Ilu(IluSymbolic::new(sparsity)?),
+        };
+        Ok(SymbolicPrecond { kind: *self, sparsity: sparsity.clone(), inner })
+    }
+
+    /// Construct the preconditioner for a given matrix. One-shot convenience:
+    /// symbolic phase on the matrix's own structure, then numeric refactor —
+    /// the exact code path sequence drivers take per system, so cached-reuse
+    /// and fresh builds are bit-identical by construction.
     pub fn build(&self, a: &Csr) -> Result<Box<dyn Preconditioner>> {
-        Ok(match self {
-            PrecondKind::None => Box::new(Identity),
-            PrecondKind::Jacobi => Box::new(Jacobi::new(a)?),
-            PrecondKind::BJacobi => Box::new(BlockJacobi::new(a, default_blocks(a.nrows()))?),
-            PrecondKind::Sor => Box::new(Sor::new(a, 1.5)?),
-            PrecondKind::Asm => Box::new(Asm::new(a, default_blocks(a.nrows()), overlap_for(a.nrows()))?),
-            PrecondKind::Icc => Box::new(Icc0::new(a)?),
-            PrecondKind::Ilu => Box::new(Ilu0::new(a)?),
+        self.symbolic(a.sparsity())?.refactor(a)
+    }
+}
+
+/// A preconditioner's structure-dependent half, built once per sparsity and
+/// reused across every system of a sorted sequence via [`SymbolicPrecond::refactor`].
+pub struct SymbolicPrecond {
+    kind: PrecondKind,
+    sparsity: Arc<Sparsity>,
+    inner: Symbolic,
+}
+
+enum Symbolic {
+    None,
+    Jacobi,
+    BJacobi(BjSymbolic),
+    Sor,
+    Asm(AsmSymbolic),
+    Icc(IccSymbolic),
+    Ilu(IluSymbolic),
+}
+
+impl SymbolicPrecond {
+    pub fn kind(&self) -> PrecondKind {
+        self.kind
+    }
+
+    /// The structure this symbolic phase was built for.
+    pub fn sparsity(&self) -> &Arc<Sparsity> {
+        &self.sparsity
+    }
+
+    /// Whether `a` can reuse this symbolic phase: pointer-equal structure
+    /// (the shared-`Arc` fast path) or an equal pattern.
+    pub fn matches(&self, a: &Csr) -> bool {
+        Arc::ptr_eq(&self.sparsity, a.sparsity()) || *self.sparsity == **a.sparsity()
+    }
+
+    /// Cheap numeric rebuild for one system on the precomputed structure.
+    pub fn refactor(&self, a: &Csr) -> Result<Box<dyn Preconditioner>> {
+        if !self.matches(a) {
+            anyhow::bail!("symbolic {:?} does not match the matrix sparsity", self.kind);
+        }
+        Ok(match &self.inner {
+            Symbolic::None => Box::new(Identity),
+            Symbolic::Jacobi => Box::new(Jacobi::new(a)?),
+            Symbolic::BJacobi(s) => Box::new(s.refactor(a)?),
+            Symbolic::Sor => Box::new(Sor::new(a, 1.5)?),
+            Symbolic::Asm(s) => Box::new(s.refactor(a)?),
+            Symbolic::Icc(s) => Box::new(s.refactor(a)?),
+            Symbolic::Ilu(s) => Box::new(s.refactor(a)?),
         })
     }
 }
@@ -170,6 +242,35 @@ mod tests {
             assert_eq!(back, kind);
         }
         assert!(PrecondKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn symbolic_refactor_equals_fresh_build_for_all_kinds() {
+        let a = nonsym(64);
+        for kind in PrecondKind::ALL {
+            let sym = kind.symbolic(a.sparsity()).unwrap();
+            assert_eq!(sym.kind(), kind);
+            for shift in [0.0, 0.25] {
+                let b = a.add_diag(shift);
+                assert!(sym.matches(&b));
+                let fresh = kind.build(&b).unwrap();
+                let reused = sym.refactor(&b).unwrap();
+                let r: Vec<f64> = (0..64).map(|i| (i as f64 * 0.11).sin()).collect();
+                let (mut z1, mut z2) = (vec![0.0; 64], vec![0.0; 64]);
+                fresh.apply(&r, &mut z1);
+                reused.apply(&r, &mut z2);
+                for (u, v) in z1.iter().zip(&z2) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{kind:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symbolic_rejects_mismatched_pattern() {
+        let sym = PrecondKind::Ilu.symbolic(lap1d(8).sparsity()).unwrap();
+        assert!(!sym.matches(&lap1d(9)));
+        assert!(sym.refactor(&lap1d(9)).is_err());
     }
 
     #[test]

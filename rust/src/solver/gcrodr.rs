@@ -9,7 +9,14 @@
 //! the projected operator `(I − C_kC_kᴴ) A`. Right preconditioning is used
 //! throughout; the recycled vectors live in the preconditioned variable
 //! space (see DESIGN.md).
+//!
+//! The n-sized scratch (residual, operator/preconditioner outputs, the
+//! correction accumulator and the Krylov basis pool) lives in a
+//! [`Workspace`] shared across the solves of a sequence; per-cycle O(m)
+//! arrays stay local. Pooled buffers are fully (re)initialised before any
+//! read, so workspace reuse is bit-identical to fresh allocation.
 
+use super::workspace::{pool_push_copy, pool_push_div, Workspace};
 use crate::la::{axpy, dot, norm2, Csr, Mat};
 use crate::obs::{NoopObserver, SolveObserver};
 use crate::precond::Preconditioner;
@@ -168,6 +175,23 @@ pub fn gcrodr_observed(
     rec: &mut Recycler,
     obs: &mut dyn SolveObserver,
 ) -> SolveStats {
+    gcrodr_ws(a, b, x, m_inv, cfg, rec, obs, &mut Workspace::new())
+}
+
+/// [`gcrodr_observed`] on a caller-owned [`Workspace`]. When the workspace's
+/// shapes match the previous solve the n-sized scratch and the Krylov basis
+/// pool are reused without reallocation.
+#[allow(clippy::too_many_arguments)]
+pub fn gcrodr_ws(
+    a: &Csr,
+    b: &[f64],
+    x: &mut [f64],
+    m_inv: &dyn Preconditioner,
+    cfg: &SolverConfig,
+    rec: &mut Recycler,
+    obs: &mut dyn SolveObserver,
+    ws: &mut Workspace,
+) -> SolveStats {
     let timer = Timer::start();
     let n = b.len();
     let m = cfg.m.max(2);
@@ -176,14 +200,14 @@ pub fn gcrodr_observed(
     let mut trace: Vec<(usize, f64)> = Vec::new();
     let mut iters = 0usize;
 
-    let mut z = vec![0.0; n]; // scratch for M⁻¹
-    let mut w = vec![0.0; n];
+    ws.prepare(n, m);
+    let Workspace { w, z, r, du, basis, .. } = ws;
 
     // r = b − A x
-    let mut r = b.to_vec();
-    a.matvec_into(x, &mut w);
-    axpy(-1.0, &w, &mut r);
-    let mut rel = norm2(&r) / bnorm;
+    r.copy_from_slice(b);
+    a.matvec_into(x, w);
+    axpy(-1.0, w, r);
+    let mut rel = norm2(r) / bnorm;
     obs.on_start(n, rel);
     if cfg.record_trace {
         trace.push((0, rel));
@@ -216,42 +240,42 @@ pub fn gcrodr_observed(
         // holds, so skip the k reseed applies and project immediately.
         let (u, c) = rec.uc.take().unwrap();
         let k = c.len();
-        let mut du = vec![0.0; n];
+        du.fill(0.0);
         for j in 0..k {
-            let cj = dot(&c[j], &r);
-            axpy(cj, &u[j], &mut du);
-            axpy(-cj, &c[j], &mut r);
+            let cj = dot(&c[j], r);
+            axpy(cj, &u[j], du);
+            axpy(-cj, &c[j], r);
         }
-        m_inv.apply(&du, &mut z);
-        axpy(1.0, &z, x);
+        m_inv.apply(du, z);
+        axpy(1.0, z, x);
         obs.on_recycle(k, true);
         uc = Some((u, c));
-        rel = norm2(&r) / bnorm;
+        rel = norm2(r) / bnorm;
         rec.ytilde = None;
     } else if let Some(y) = rec.ytilde.take() {
         if let Some((u, c)) = reseed(a, m_inv, &y, &mut iters) {
             // x ← x + M⁻¹ (U Cᵀ r);   r ← r − C Cᵀ r
             let k = c.len();
-            let mut du = vec![0.0; n];
+            du.fill(0.0);
             for j in 0..k {
-                let cj = dot(&c[j], &r);
-                axpy(cj, &u[j], &mut du);
-                axpy(-cj, &c[j], &mut r);
+                let cj = dot(&c[j], r);
+                axpy(cj, &u[j], du);
+                axpy(-cj, &c[j], r);
             }
-            m_inv.apply(&du, &mut z);
-            axpy(1.0, &z, x);
+            m_inv.apply(du, z);
+            axpy(1.0, z, x);
             obs.on_recycle(k, false);
             uc = Some((u, c));
-            rel = norm2(&r) / bnorm;
+            rel = norm2(r) / bnorm;
         }
     }
 
     if uc.is_none() {
         // First system of the sequence: one full GMRES(m) cycle to harvest
         // harmonic Ritz vectors (Alg. 2, lines 9–18).
-        let beta = norm2(&r);
-        let mut basis: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
-        basis.push(r.iter().map(|v| v / beta).collect());
+        let beta = norm2(r);
+        let mut blen = 0usize;
+        pool_push_div(basis, &mut blen, r, beta);
         let mut h_cols: Vec<Vec<f64>> = Vec::new(); // column j holds H[0..=j+1, j]
         let mut j_done = 0;
         // Incremental Givens QR of H̄ for a per-step residual estimate
@@ -262,10 +286,10 @@ pub fn gcrodr_observed(
         let mut grot = vec![0.0; m + 1];
         grot[0] = beta;
         for j in 0..m {
-            apply_op(a, m_inv, &basis[j], &mut z, &mut w);
+            apply_op(a, m_inv, &basis[j], z, w);
             iters += 1;
-            let mut coeffs = crate::la::ortho::cgs2_orthogonalize(&mut w, &basis);
-            let hnext = crate::la::ortho::normalize(&mut w);
+            let mut coeffs = crate::la::ortho::cgs2_orthogonalize(w, &basis[..blen]);
+            let hnext = crate::la::ortho::normalize(w);
             coeffs.push(hnext);
             // Rotate the new column and extend the QR.
             let mut col = coeffs.clone();
@@ -287,11 +311,11 @@ pub fn gcrodr_observed(
             let rel_est = grot[j + 1].abs() / bnorm;
             if hnext < 1e-14 * bnorm || iters >= cfg.max_iters || rel_est < cfg.tol {
                 if hnext >= 1e-14 * bnorm {
-                    basis.push(w.clone());
+                    pool_push_copy(basis, &mut blen, w);
                 }
                 break;
             }
-            basis.push(w.clone());
+            pool_push_copy(basis, &mut blen, w);
         }
         // LS solve: min ‖βe₁ − H̄ y‖ over the j_done columns.
         let mut h_bar = Mat::zeros(j_done + 1, j_done);
@@ -305,12 +329,12 @@ pub fn gcrodr_observed(
         let mut rhs = vec![0.0; j_done + 1];
         rhs[0] = beta;
         if let Ok(y) = h_bar.lstsq(&rhs) {
-            let mut du = vec![0.0; n];
+            du.fill(0.0);
             for (l, yl) in y.iter().enumerate() {
-                axpy(*yl, &basis[l], &mut du);
+                axpy(*yl, &basis[l], du);
             }
-            m_inv.apply(&du, &mut z);
-            axpy(1.0, &z, x);
+            m_inv.apply(du, z);
+            axpy(1.0, z, x);
             // r = V_{m+1} (βe₁ − H̄ y)
             let hy = h_bar.matvec(&y);
             let mut coef = rhs.clone();
@@ -318,10 +342,10 @@ pub fn gcrodr_observed(
                 coef[i] -= hy[i];
             }
             r.fill(0.0);
-            for (l, cl) in coef.iter().enumerate().take(basis.len()) {
-                axpy(*cl, &basis[l], &mut r);
+            for (l, cl) in coef.iter().enumerate().take(blen) {
+                axpy(*cl, &basis[l], r);
             }
-            rel = norm2(&r) / bnorm;
+            rel = norm2(r) / bnorm;
         }
         obs.on_cycle(iters, rel);
         if cfg.record_trace {
@@ -332,7 +356,7 @@ pub fn gcrodr_observed(
         // Harvest as many harmonic Ritz vectors as the cycle length allows
         // (k_target when the cycle ran long enough, fewer on early exit).
         let k_avail = k_target.min(j_done.saturating_sub(1));
-        if k_avail >= 1 && basis.len() == j_done + 1 {
+        if k_avail >= 1 && blen == j_done + 1 {
             if let Ok(p) = harmonic_ritz_initial(&h_bar, k_avail) {
                 let kk = p.ncols;
                 // Ỹ = V_m P
@@ -349,7 +373,7 @@ pub fn gcrodr_observed(
                     let mut u_cols = vec![vec![0.0; n]; kk];
                     let mut c_cols = vec![vec![0.0; n]; kk];
                     for j in 0..kk {
-                        for (l, vl) in basis.iter().enumerate() {
+                        for (l, vl) in basis[..blen].iter().enumerate() {
                             axpy(q[(l, j)], vl, &mut c_cols[j]);
                         }
                         for i in 0..kk {
@@ -395,17 +419,17 @@ pub fn gcrodr_observed(
         }).collect();
 
         // Arnoldi on (I − CCᵀ) A_op.
-        let rn = norm2(&r);
-        let mut basis: Vec<Vec<f64>> = Vec::with_capacity(s + 1);
+        let rn = norm2(r);
+        let mut blen = 0usize;
         {
             // v₁ = r/‖r‖, re-orthogonalized against C for numerical safety.
-            let mut v1: Vec<f64> = r.iter().map(|v| v / rn).collect();
+            pool_push_div(basis, &mut blen, r, rn);
+            let v1 = &mut basis[0];
             for cj in c {
-                let h = dot(cj, &v1);
-                axpy(-h, cj, &mut v1);
+                let h = dot(cj, v1);
+                axpy(-h, cj, v1);
             }
-            crate::la::ortho::normalize(&mut v1);
-            basis.push(v1);
+            crate::la::ortho::normalize(v1);
         }
         let mut bmat = Mat::zeros(k, s); // B = Cᵀ A V_s
         let mut h_cols: Vec<Vec<f64>> = Vec::new();
@@ -418,18 +442,18 @@ pub fn gcrodr_observed(
         let mut cs_r = vec![0.0; s];
         let mut sn_r = vec![0.0; s];
         let mut grot = vec![0.0; s + 1];
-        grot[0] = dot(&basis[0], &r);
+        grot[0] = dot(&basis[0], r);
         for j in 0..s {
-            apply_op(a, m_inv, &basis[j], &mut z, &mut w);
+            apply_op(a, m_inv, &basis[j], z, w);
             iters += 1;
             // Project out C, recording B.
             for (i, ci) in c.iter().enumerate() {
-                let h = dot(ci, &w);
+                let h = dot(ci, w);
                 bmat[(i, j)] = h;
-                axpy(-h, ci, &mut w);
+                axpy(-h, ci, w);
             }
-            let mut coeffs = crate::la::ortho::cgs2_orthogonalize(&mut w, &basis);
-            let hnext = crate::la::ortho::normalize(&mut w);
+            let mut coeffs = crate::la::ortho::cgs2_orthogonalize(w, &basis[..blen]);
+            let hnext = crate::la::ortho::normalize(w);
             coeffs.push(hnext);
             // Extend the Givens QR with the rotated Hessenberg column.
             let mut col = coeffs.clone();
@@ -451,11 +475,11 @@ pub fn gcrodr_observed(
             let rel_est = grot[j + 1].abs() / bnorm;
             if hnext < 1e-14 * bnorm || iters >= cfg.max_iters || rel_est < cfg.tol {
                 if hnext >= 1e-14 * bnorm {
-                    basis.push(w.clone());
+                    pool_push_copy(basis, &mut blen, w);
                 }
                 break;
             }
-            basis.push(w.clone());
+            pool_push_copy(basis, &mut blen, w);
         }
         if s_done == 0 {
             break;
@@ -479,37 +503,37 @@ pub fn gcrodr_observed(
         // Ŵᵀ r (W = [C V_{s+1}]).
         let mut rhs = vec![0.0; mdim + 1];
         for (i, ci) in c.iter().enumerate() {
-            rhs[i] = dot(ci, &r);
+            rhs[i] = dot(ci, r);
         }
-        for (l, vl) in basis.iter().enumerate() {
-            rhs[k + l] = dot(vl, &r);
+        for (l, vl) in basis[..blen].iter().enumerate() {
+            rhs[k + l] = dot(vl, r);
         }
 
         let Ok(y) = g_bar.lstsq(&rhs) else { break };
 
         // x ← x + M⁻¹ (V̂ y) with V̂ = [Û V_s].
-        let mut du = vec![0.0; n];
+        du.fill(0.0);
         for j in 0..k {
             let coef = y[j] * dvals[j];
             if coef != 0.0 {
-                axpy(coef, &u[j], &mut du);
+                axpy(coef, &u[j], du);
             }
         }
         for j in 0..s_done {
-            axpy(y[k + j], &basis[j], &mut du);
+            axpy(y[k + j], &basis[j], du);
         }
-        m_inv.apply(&du, &mut z);
-        axpy(1.0, &z, x);
+        m_inv.apply(du, z);
+        axpy(1.0, z, x);
 
         // r ← r − Ŵ (Ḡ y).
         let gy = g_bar.matvec(&y);
         for (i, ci) in c.iter().enumerate() {
-            axpy(-gy[i], ci, &mut r);
+            axpy(-gy[i], ci, r);
         }
-        for (l, vl) in basis.iter().enumerate() {
-            axpy(-gy[k + l], vl, &mut r);
+        for (l, vl) in basis[..blen].iter().enumerate() {
+            axpy(-gy[k + l], vl, r);
         }
-        rel = norm2(&r) / bnorm;
+        rel = norm2(r) / bnorm;
         obs.on_cycle(iters, rel);
         if cfg.record_trace {
             trace.push((iters, rel));
@@ -524,7 +548,7 @@ pub fn gcrodr_observed(
             for (i, ci) in c.iter().enumerate() {
                 whv[(i, j)] = dot(ci, &uhat);
             }
-            for (l, vl) in basis.iter().enumerate() {
+            for (l, vl) in basis[..blen].iter().enumerate() {
                 whv[(k + l, j)] = dot(vl, &uhat);
             }
         }
@@ -558,7 +582,7 @@ pub fn gcrodr_observed(
                         for (i, ci) in c.iter().enumerate() {
                             axpy(q[(i, j)], ci, &mut c_new[j]);
                         }
-                        for (l, vl) in basis.iter().enumerate() {
+                        for (l, vl) in basis[..blen].iter().enumerate() {
                             axpy(q[(k + l, j)], vl, &mut c_new[j]);
                         }
                         for i in 0..kk {
@@ -587,11 +611,12 @@ pub fn gcrodr_observed(
         rec.fingerprint = fp;
     }
 
-    // Honest final residual.
-    let mut rtrue = b.to_vec();
-    a.matvec_into(x, &mut w);
-    axpy(-1.0, &w, &mut rtrue);
-    let final_rel = norm2(&rtrue) / bnorm;
+    // Honest final residual; r's recurrence value is dead, so the pooled
+    // buffer is reused for the true residual.
+    r.copy_from_slice(b);
+    a.matvec_into(x, w);
+    axpy(-1.0, w, r);
+    let final_rel = norm2(r) / bnorm;
     let stop = if final_rel < cfg.tol * 1.5 {
         StopReason::Converged
     } else if iters >= cfg.max_iters {
@@ -729,6 +754,39 @@ mod tests {
                 assert!(obs.max_deflation_dim() >= 1);
             }
         }
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_identical() {
+        // Acceptance gate: a shared workspace threaded through the sequence
+        // must reproduce the fresh-workspace solves bit-for-bit.
+        let n = 200;
+        let base = lap1d(n);
+        let cfg = SolverConfig::default().with_tol(1e-9).with_m(25).with_k(6);
+        let mut rng = Rng::new(91);
+        let systems: Vec<(Csr, Vec<f64>)> =
+            (0..3).map(|i| (base.add_diag(0.01 * i as f64), rng.normals(n))).collect();
+
+        let mut rec1 = Recycler::new();
+        let mut plain: Vec<(Vec<f64>, SolveStats)> = Vec::new();
+        for (a, b) in &systems {
+            let mut x = vec![0.0; n];
+            let s = gcrodr(a, b, &mut x, &Identity, &cfg, &mut rec1);
+            plain.push((x, s));
+        }
+
+        let mut rec2 = Recycler::new();
+        let mut ws = Workspace::new();
+        for (i, (a, b)) in systems.iter().enumerate() {
+            let mut x = vec![0.0; n];
+            let s = gcrodr_ws(a, b, &mut x, &Identity, &cfg, &mut rec2, &mut NoopObserver, &mut ws);
+            assert_eq!(s.iters, plain[i].1.iters, "system {i}");
+            assert_eq!(s.rel_residual.to_bits(), plain[i].1.rel_residual.to_bits(), "system {i}");
+            for (u, v) in x.iter().zip(&plain[i].0) {
+                assert_eq!(u.to_bits(), v.to_bits(), "system {i}");
+            }
+        }
+        assert_eq!(ws.reuse_count(), 2);
     }
 
     #[test]

@@ -4,7 +4,14 @@
 //! Iterates on A M⁻¹ u = b with x = M⁻¹ u, so the *true* residual norm is
 //! available directly from the least-squares problem and tolerance semantics
 //! match PETSc's `KSPSetTolerances(rtol)`.
+//!
+//! All scratch (Krylov basis, Hessenberg, Givens arrays, residual and
+//! correction vectors) lives in a [`Workspace`]; sequence drivers pass one
+//! workspace through every solve so steady-state solves allocate nothing.
+//! Pooled buffers are fully (re)initialised before any read, so workspace
+//! reuse is bit-identical to fresh allocation.
 
+use super::workspace::{pool_push_copy, pool_push_scaled, Workspace};
 use crate::la::{axpy, norm2, Csr};
 use crate::obs::{NoopObserver, SolveObserver};
 use crate::precond::Preconditioner;
@@ -34,6 +41,21 @@ pub fn gmres_observed(
     cfg: &SolverConfig,
     obs: &mut dyn SolveObserver,
 ) -> SolveStats {
+    gmres_ws(a, b, x, m_inv, cfg, obs, &mut Workspace::new())
+}
+
+/// [`gmres_observed`] on a caller-owned [`Workspace`]. When the workspace's
+/// shapes match the previous solve every buffer — including the Krylov basis
+/// pool and the Hessenberg — is reused without reallocation.
+pub fn gmres_ws(
+    a: &Csr,
+    b: &[f64],
+    x: &mut [f64],
+    m_inv: &dyn Preconditioner,
+    cfg: &SolverConfig,
+    obs: &mut dyn SolveObserver,
+    ws: &mut Workspace,
+) -> SolveStats {
     let timer = Timer::start();
     let n = b.len();
     let m = cfg.m.max(1);
@@ -42,20 +64,14 @@ pub fn gmres_observed(
     let mut trace = Vec::new();
     let mut total_iters = 0usize;
 
-    // Workspace reused across restarts (no allocation inside the cycle).
-    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(m + 1);
-    let mut h = vec![0.0; (m + 1) * m]; // column-major (m+1) x m
-    let mut cs = vec![0.0; m];
-    let mut sn = vec![0.0; m];
-    let mut g = vec![0.0; m + 1];
-    let mut w = vec![0.0; n];
-    let mut z = vec![0.0; n];
+    ws.prepare(n, m);
+    let Workspace { basis, h, cs, sn, g, w, z, r, du, y, .. } = ws;
 
     let mut rel = {
-        let mut r = b.to_vec();
-        a.matvec_into(x, &mut w);
-        axpy(-1.0, &w, &mut r);
-        norm2(&r) / bnorm
+        r.copy_from_slice(b);
+        a.matvec_into(x, w);
+        axpy(-1.0, w, r);
+        norm2(r) / bnorm
     };
     obs.on_start(n, rel);
     if cfg.record_trace {
@@ -75,36 +91,37 @@ pub fn gmres_observed(
 
     'restart: loop {
         // r = b - A x
-        let mut r = b.to_vec();
-        a.matvec_into(x, &mut w);
-        axpy(-1.0, &w, &mut r);
-        let beta = norm2(&r);
+        r.copy_from_slice(b);
+        a.matvec_into(x, w);
+        axpy(-1.0, w, r);
+        let beta = norm2(r);
         rel = beta / bnorm;
         if rel < cfg.tol {
             break 'restart;
         }
-        basis.clear();
-        let inv = 1.0 / beta;
-        basis.push(r.iter().map(|v| v * inv).collect());
+        // Logical basis length; the pooled vectors behind it persist across
+        // restarts and across solves.
+        let mut blen = 0usize;
+        pool_push_scaled(basis, &mut blen, r, 1.0 / beta);
         g.iter_mut().for_each(|v| *v = 0.0);
         g[0] = beta;
         let mut j_done = 0usize;
 
         for j in 0..m {
             // w = A M⁻¹ v_j
-            m_inv.apply(&basis[j], &mut z);
-            a.matvec_into(&z, &mut w);
+            m_inv.apply(&basis[j], z);
+            a.matvec_into(z, w);
             total_iters += 1;
             // Arnoldi (MGS + DGKS).
-            let coeffs = crate::la::ortho::cgs2_orthogonalize(&mut w, &basis);
+            let coeffs = crate::la::ortho::cgs2_orthogonalize(w, &basis[..blen]);
             for (i, c) in coeffs.iter().enumerate() {
                 h[j * (m + 1) + i] = *c;
             }
-            let hnext = crate::la::ortho::normalize(&mut w);
+            let hnext = crate::la::ortho::normalize(w);
             h[j * (m + 1) + j + 1] = hnext;
             let breakdown = hnext < 1e-14 * bnorm;
             if !breakdown {
-                basis.push(w.clone());
+                pool_push_copy(basis, &mut blen, w);
             }
             // Apply stored Givens rotations to the new column.
             let col = &mut h[j * (m + 1)..j * (m + 1) + m + 1];
@@ -137,7 +154,9 @@ pub fn gmres_observed(
         // (near-)zero diagonal means the Krylov space hit an invariant
         // subspace of a singular operator: the component is indeterminate,
         // so take 0 (minimum-norm choice) rather than dividing by zero.
-        let mut y = vec![0.0; j_done];
+        // Every y[i] is written before it is read, so the pooled buffer
+        // needs no clearing.
+        let y = &mut y[..j_done];
         for i in (0..j_done).rev() {
             let mut s = g[i];
             for l in i + 1..j_done {
@@ -147,12 +166,12 @@ pub fn gmres_observed(
             y[i] = if d.abs() > 1e-300 { s / d } else { 0.0 };
         }
         // x += M⁻¹ (V y)
-        let mut vy = vec![0.0; n];
+        du.fill(0.0);
         for (l, yl) in y.iter().enumerate() {
-            axpy(*yl, &basis[l], &mut vy);
+            axpy(*yl, &basis[l], du);
         }
-        m_inv.apply(&vy, &mut z);
-        axpy(1.0, &z, x);
+        m_inv.apply(du, z);
+        axpy(1.0, z, x);
 
         obs.on_cycle(total_iters, rel);
         if cfg.record_trace {
@@ -163,13 +182,13 @@ pub fn gmres_observed(
         }
         if total_iters >= cfg.max_iters {
             // Recompute the true residual for honest reporting.
-            let mut r = b.to_vec();
-            a.matvec_into(x, &mut w);
-            axpy(-1.0, &w, &mut r);
+            r.copy_from_slice(b);
+            a.matvec_into(x, w);
+            axpy(-1.0, w, r);
             let stats = SolveStats {
                 iters: total_iters,
                 seconds: timer.secs(),
-                rel_residual: norm2(&r) / bnorm,
+                rel_residual: norm2(r) / bnorm,
                 stop: StopReason::MaxIters,
                 trace,
             };
@@ -181,10 +200,10 @@ pub fn gmres_observed(
     // True residual on exit — convergence is only claimed when the honest
     // residual agrees (a breakdown on a singular operator can fool the
     // Givens estimate).
-    let mut r = b.to_vec();
-    a.matvec_into(x, &mut w);
-    axpy(-1.0, &w, &mut r);
-    let final_rel = norm2(&r) / bnorm;
+    r.copy_from_slice(b);
+    a.matvec_into(x, w);
+    axpy(-1.0, w, r);
+    let final_rel = norm2(r) / bnorm;
     let stop = if final_rel.is_finite() && final_rel < cfg.tol * 1.5 {
         StopReason::Converged
     } else {
@@ -204,8 +223,8 @@ pub fn gmres_observed(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::precond::{Identity, Ilu0, Jacobi, PrecondKind};
     use crate::precond::testutil::{lap1d, nonsym};
+    use crate::precond::{Identity, Ilu0, Jacobi, PrecondKind};
     use crate::util::prng::Rng;
 
     fn solve_and_check(a: &Csr, cfg: &SolverConfig, p: &dyn Preconditioner) -> SolveStats {
@@ -341,5 +360,27 @@ mod tests {
         let stats = gmres(&a, &b, &mut x, &Identity, &cfg);
         assert!(stats.trace.len() >= 2);
         assert!(stats.trace.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_identical() {
+        // Acceptance gate: a dirty workspace carried over from a previous
+        // solve must not perturb a single bit of the next solve.
+        let cfg = SolverConfig::default().with_tol(1e-10).with_m(15);
+        let mut ws = Workspace::new();
+        for shift in [0.0, 0.1, 0.35] {
+            let a = lap1d(220).add_diag(shift);
+            let b: Vec<f64> = (0..220).map(|i| (i as f64 * 0.13).sin()).collect();
+            let mut x1 = vec![0.0; 220];
+            let s1 = gmres(&a, &b, &mut x1, &Identity, &cfg);
+            let mut x2 = vec![0.0; 220];
+            let s2 = gmres_ws(&a, &b, &mut x2, &Identity, &cfg, &mut NoopObserver, &mut ws);
+            assert_eq!(s1.iters, s2.iters);
+            assert_eq!(s1.rel_residual.to_bits(), s2.rel_residual.to_bits());
+            for (u, v) in x1.iter().zip(&x2) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
+        assert_eq!(ws.reuse_count(), 2);
     }
 }

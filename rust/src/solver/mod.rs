@@ -1,18 +1,28 @@
 //! Krylov solvers: the GMRES(m) baseline and the paper's GCRO-DR recycling
 //! engine, plus sequence-level drivers used by the coordinator and benches.
+//!
+//! The drivers own the per-sequence reusable state: one [`Workspace`] (Krylov
+//! basis, Hessenberg, Givens and scratch vectors), one cached
+//! `SymbolicPrecond` keyed on the matrix [`Sparsity`], and one [`Recycler`].
+//! [`solve_sequence_traced`] reports how often each was reused via
+//! [`SequenceReuse`].
 
 pub mod gcrodr;
 pub mod gmres;
 pub mod harmonic;
 pub mod stats;
+pub mod workspace;
 
-pub use gcrodr::{gcrodr, gcrodr_observed, Recycler};
-pub use gmres::{gmres, gmres_observed};
+pub use gcrodr::{gcrodr, gcrodr_observed, gcrodr_ws, Recycler};
+pub use gmres::{gmres, gmres_observed, gmres_ws};
 pub use stats::{SolveStats, SolverConfig, StopReason};
+pub use workspace::Workspace;
 
-use crate::la::Csr;
-use crate::precond::PrecondKind;
+use crate::la::{Csr, Sparsity};
+use crate::obs::NoopObserver;
+use crate::precond::{PrecondKind, SymbolicPrecond};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Which engine solves the sequence.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -51,6 +61,19 @@ pub struct LinearSystem {
     pub params: Vec<f64>,
 }
 
+/// Tallies of the structure/scratch reuse a sequence driver achieved.
+/// `sparsity_reuse` counts systems whose matrix shared the previous system's
+/// `Arc<Sparsity>` by pointer; `symbolic_reuse` counts systems whose
+/// preconditioner skipped the symbolic phase; `workspace_reuse` counts solves
+/// that reran on the pooled Krylov buffers without reallocation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SequenceReuse {
+    pub systems: usize,
+    pub sparsity_reuse: usize,
+    pub symbolic_reuse: usize,
+    pub workspace_reuse: usize,
+}
+
 /// Solve a sequence of systems **in the given order** with one engine and a
 /// per-system preconditioner. Returns per-system solutions and stats.
 pub fn solve_sequence(
@@ -59,18 +82,61 @@ pub fn solve_sequence(
     precond: PrecondKind,
     cfg: &SolverConfig,
 ) -> Result<Vec<(Vec<f64>, SolveStats)>> {
+    Ok(solve_sequence_traced(systems, engine, precond, cfg)?.0)
+}
+
+/// [`solve_sequence`] plus the [`SequenceReuse`] tallies. The reuse caches
+/// change no arithmetic: a cached symbolic phase runs the same numeric
+/// refactor a fresh build would, and pooled solver buffers are fully
+/// reinitialised per solve, so results are bit-identical to per-system fresh
+/// solves.
+pub fn solve_sequence_traced(
+    systems: &[LinearSystem],
+    engine: Engine,
+    precond: PrecondKind,
+    cfg: &SolverConfig,
+) -> Result<(Vec<(Vec<f64>, SolveStats)>, SequenceReuse)> {
     let mut out = Vec::with_capacity(systems.len());
     let mut rec = Recycler::new();
+    let mut ws = Workspace::new();
+    let mut symbolic: Option<SymbolicPrecond> = None;
+    let mut prev_sparsity: Option<Arc<Sparsity>> = None;
+    let mut reuse = SequenceReuse { systems: systems.len(), ..Default::default() };
     for sys in systems {
-        let p = precond.build(&sys.a)?;
+        if prev_sparsity.as_ref().is_some_and(|sp| Arc::ptr_eq(sp, sys.a.sparsity())) {
+            reuse.sparsity_reuse += 1;
+        } else {
+            prev_sparsity = Some(sys.a.sparsity().clone());
+        }
+        let sym = match symbolic.take() {
+            Some(s) if s.matches(&sys.a) => {
+                reuse.symbolic_reuse += 1;
+                s
+            }
+            _ => precond.symbolic(sys.a.sparsity())?,
+        };
+        let p = sym.refactor(&sys.a)?;
+        symbolic = Some(sym);
         let mut x = vec![0.0; sys.b.len()];
         let stats = match engine {
-            Engine::Gmres => gmres(&sys.a, &sys.b, &mut x, p.as_ref(), cfg),
-            Engine::SkrRecycle => gcrodr(&sys.a, &sys.b, &mut x, p.as_ref(), cfg, &mut rec),
+            Engine::Gmres => {
+                gmres_ws(&sys.a, &sys.b, &mut x, p.as_ref(), cfg, &mut NoopObserver, &mut ws)
+            }
+            Engine::SkrRecycle => gcrodr_ws(
+                &sys.a,
+                &sys.b,
+                &mut x,
+                p.as_ref(),
+                cfg,
+                &mut rec,
+                &mut NoopObserver,
+                &mut ws,
+            ),
         };
         out.push((x, stats));
     }
-    Ok(out)
+    reuse.workspace_reuse = ws.reuse_count();
+    Ok((out, reuse))
 }
 
 #[cfg(test)]
@@ -120,5 +186,66 @@ mod tests {
         assert_eq!(Engine::parse("gmres").unwrap(), Engine::Gmres);
         assert_eq!(Engine::parse("SKR").unwrap(), Engine::SkrRecycle);
         assert!(Engine::parse("magic").is_err());
+    }
+
+    #[test]
+    fn sequence_reuses_symbolic_and_workspace() {
+        // add_diag rebuilds the pattern (no Arc sharing), but the patterns
+        // are equal, so the symbolic cache and the solver workspace are
+        // reused for every system after the first.
+        let systems = sequence(120, 4);
+        let cfg = SolverConfig::default().with_tol(1e-9).with_m(20).with_k(5);
+        for engine in [Engine::Gmres, Engine::SkrRecycle] {
+            let (res, reuse) =
+                solve_sequence_traced(&systems, engine, PrecondKind::Ilu, &cfg).unwrap();
+            assert_eq!(res.len(), 4);
+            assert_eq!(reuse.systems, 4, "{engine:?}");
+            assert_eq!(reuse.sparsity_reuse, 0, "{engine:?}");
+            assert_eq!(reuse.symbolic_reuse, 3, "{engine:?}");
+            assert_eq!(reuse.workspace_reuse, 3, "{engine:?}");
+        }
+    }
+
+    #[test]
+    fn sequence_counts_shared_sparsity() {
+        // Systems stamped onto one shared Arc<Sparsity> (the pde fast path)
+        // are recognised by pointer, not pattern comparison.
+        let base = nonsym(80);
+        let sp = base.sparsity().clone();
+        let mut rng = Rng::new(7);
+        let systems: Vec<LinearSystem> = (0..3)
+            .map(|i| {
+                let mut vals = base.values().to_vec();
+                for v in &mut vals {
+                    *v *= 1.0 + 0.01 * i as f64;
+                }
+                let a = Csr::with_values(sp.clone(), vals).unwrap();
+                LinearSystem { id: i, a, b: rng.normals(80), params: vec![i as f64] }
+            })
+            .collect();
+        let cfg = SolverConfig::default().with_tol(1e-9);
+        let (_, reuse) =
+            solve_sequence_traced(&systems, Engine::Gmres, PrecondKind::Jacobi, &cfg).unwrap();
+        assert_eq!(reuse.sparsity_reuse, 2);
+        assert_eq!(reuse.symbolic_reuse, 2);
+        assert_eq!(reuse.workspace_reuse, 2);
+    }
+
+    #[test]
+    fn traced_matches_untraced_bitwise() {
+        let systems = sequence(100, 3);
+        let cfg = SolverConfig::default().with_tol(1e-9).with_m(20).with_k(4);
+        for engine in [Engine::Gmres, Engine::SkrRecycle] {
+            let plain = solve_sequence(&systems, engine, PrecondKind::Jacobi, &cfg).unwrap();
+            let (traced, _) =
+                solve_sequence_traced(&systems, engine, PrecondKind::Jacobi, &cfg).unwrap();
+            for ((x1, s1), (x2, s2)) in plain.iter().zip(&traced) {
+                assert_eq!(s1.iters, s2.iters);
+                assert_eq!(s1.rel_residual.to_bits(), s2.rel_residual.to_bits());
+                for (u, v) in x1.iter().zip(x2) {
+                    assert_eq!(u.to_bits(), v.to_bits());
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,149 @@
+//! Reusable Krylov solver workspace.
+//!
+//! One [`Workspace`] is owned by the sequence driver (`solve_sequence`, the
+//! pipeline workers) and threaded through every solve of a shard, so the
+//! Krylov basis vectors, Hessenberg storage, Givens arrays and the residual /
+//! correction scratch are allocated once for the first system and reused for
+//! the rest — steady-state solves perform no Krylov-basis or Hessenberg
+//! allocations. Buffers are pooled, never zeroed wholesale: the solvers
+//! already fully (re)initialise every location they read, which is what keeps
+//! pooled and fresh-buffer runs bit-identical.
+
+/// Pooled buffers shared by `gmres_ws` and `gcrodr_ws`.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pub(crate) n: usize,
+    pub(crate) m: usize,
+    /// Operator-apply output / Arnoldi candidate vector.
+    pub(crate) w: Vec<f64>,
+    /// Preconditioner-apply output.
+    pub(crate) z: Vec<f64>,
+    /// Residual.
+    pub(crate) r: Vec<f64>,
+    /// Correction accumulator (V y and recycle updates).
+    pub(crate) du: Vec<f64>,
+    /// Triangular-solve solution.
+    pub(crate) y: Vec<f64>,
+    /// Column-major (m+1) × m Hessenberg.
+    pub(crate) h: Vec<f64>,
+    /// Givens cosines.
+    pub(crate) cs: Vec<f64>,
+    /// Givens sines.
+    pub(crate) sn: Vec<f64>,
+    /// Rotated right-hand side of the least-squares problem.
+    pub(crate) g: Vec<f64>,
+    /// Krylov basis pool; logical length is tracked per solve, the vectors
+    /// persist across solves.
+    pub(crate) basis: Vec<Vec<f64>>,
+    prepared: bool,
+    reuse_count: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Size the buffers for an (n, m) solve. Returns `true` when the shapes
+    /// matched the previous solve and every buffer (including the basis pool)
+    /// was reused as-is.
+    pub(crate) fn prepare(&mut self, n: usize, m: usize) -> bool {
+        let reused = self.prepared && self.n == n && self.m == m;
+        if reused {
+            self.reuse_count += 1;
+        } else {
+            self.n = n;
+            self.m = m;
+            self.w = vec![0.0; n];
+            self.z = vec![0.0; n];
+            self.r = vec![0.0; n];
+            self.du = vec![0.0; n];
+            self.y = vec![0.0; m];
+            self.h = vec![0.0; (m + 1) * m];
+            self.cs = vec![0.0; m];
+            self.sn = vec![0.0; m];
+            self.g = vec![0.0; m + 1];
+            self.basis.clear();
+            self.prepared = true;
+        }
+        reused
+    }
+
+    /// How many solves reused the buffers without reallocation.
+    pub fn reuse_count(&self) -> usize {
+        self.reuse_count
+    }
+}
+
+/// Append `scale * src` as the next pooled basis vector, allocating only if
+/// the pool has never been this deep.
+pub(crate) fn pool_push_scaled(
+    pool: &mut Vec<Vec<f64>>,
+    blen: &mut usize,
+    src: &[f64],
+    scale: f64,
+) {
+    if pool.len() == *blen {
+        pool.push(vec![0.0; src.len()]);
+    }
+    for (d, s) in pool[*blen].iter_mut().zip(src) {
+        *d = s * scale;
+    }
+    *blen += 1;
+}
+
+/// Append `src / denom` as the next pooled basis vector. Kept distinct from
+/// [`pool_push_scaled`]: `s / d` and `s * (1.0 / d)` round differently, and
+/// each solver must keep its historical arithmetic bit-for-bit.
+pub(crate) fn pool_push_div(pool: &mut Vec<Vec<f64>>, blen: &mut usize, src: &[f64], denom: f64) {
+    if pool.len() == *blen {
+        pool.push(vec![0.0; src.len()]);
+    }
+    for (d, s) in pool[*blen].iter_mut().zip(src) {
+        *d = s / denom;
+    }
+    *blen += 1;
+}
+
+/// Append a copy of `src` as the next pooled basis vector.
+pub(crate) fn pool_push_copy(pool: &mut Vec<Vec<f64>>, blen: &mut usize, src: &[f64]) {
+    if pool.len() == *blen {
+        pool.push(vec![0.0; src.len()]);
+    }
+    pool[*blen].copy_from_slice(src);
+    *blen += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepare_reuses_matching_shapes() {
+        let mut ws = Workspace::new();
+        assert!(!ws.prepare(10, 5));
+        assert!(ws.prepare(10, 5));
+        assert!(!ws.prepare(10, 6));
+        assert!(!ws.prepare(12, 6));
+        assert!(ws.prepare(12, 6));
+        assert_eq!(ws.reuse_count(), 2);
+        assert_eq!(ws.w.len(), 12);
+        assert_eq!(ws.h.len(), 7 * 6);
+    }
+
+    #[test]
+    fn pool_grows_then_recycles() {
+        let mut pool: Vec<Vec<f64>> = Vec::new();
+        let mut blen = 0;
+        pool_push_scaled(&mut pool, &mut blen, &[2.0, 4.0], 0.5);
+        pool_push_copy(&mut pool, &mut blen, &[3.0, 5.0]);
+        assert_eq!(blen, 2);
+        assert_eq!(pool[0], vec![1.0, 2.0]);
+        assert_eq!(pool[1], vec![3.0, 5.0]);
+        // Next solve resets the logical length; the allocations persist.
+        blen = 0;
+        pool_push_copy(&mut pool, &mut blen, &[7.0, 8.0]);
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool[0], vec![7.0, 8.0]);
+    }
+}

@@ -8,6 +8,7 @@ pub mod json;
 pub mod npy;
 pub mod prng;
 pub mod propcheck;
+pub mod shared;
 pub mod table;
 pub mod timer;
 

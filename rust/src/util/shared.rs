@@ -1,0 +1,97 @@
+//! Lazily-initialised shared values — the cell behind the per-family
+//! sparsity/stiffness caches.
+//!
+//! [`SharedOnce`] is a `OnceLock<Arc<T>>` that families embed so every
+//! `sample()` (across all pipeline workers) hands out the same `Arc`.
+//! Cloning a family clones the cached `Arc`, not the payload, so clones keep
+//! sharing structure with the original.
+
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+/// A write-once, share-many cell holding an `Arc<T>`.
+pub struct SharedOnce<T>(OnceLock<Arc<T>>);
+
+impl<T> SharedOnce<T> {
+    pub fn new() -> SharedOnce<T> {
+        SharedOnce(OnceLock::new())
+    }
+
+    /// The cached value, initialising it from `f` on first use. Concurrent
+    /// first calls may both run `f`; one result wins and all callers share it.
+    pub fn get_or_init(&self, f: impl FnOnce() -> T) -> Arc<T> {
+        self.0.get_or_init(|| Arc::new(f())).clone()
+    }
+
+    /// Fallible variant: the error is returned and nothing is cached, so a
+    /// later call retries.
+    pub fn get_or_try_init<E>(&self, f: impl FnOnce() -> Result<T, E>) -> Result<Arc<T>, E> {
+        if let Some(v) = self.0.get() {
+            return Ok(v.clone());
+        }
+        let v = Arc::new(f()?);
+        Ok(self.0.get_or_init(|| v).clone())
+    }
+
+    /// The cached value, if initialised.
+    pub fn get(&self) -> Option<Arc<T>> {
+        self.0.get().cloned()
+    }
+}
+
+impl<T> Default for SharedOnce<T> {
+    fn default() -> Self {
+        SharedOnce::new()
+    }
+}
+
+impl<T> Clone for SharedOnce<T> {
+    fn clone(&self) -> Self {
+        let cell = OnceLock::new();
+        if let Some(v) = self.0.get() {
+            let _ = cell.set(v.clone());
+        }
+        SharedOnce(cell)
+    }
+}
+
+impl<T> fmt::Debug for SharedOnce<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.0.get() {
+            Some(_) => f.write_str("SharedOnce(set)"),
+            None => f.write_str("SharedOnce(unset)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initialises_once_and_shares() {
+        let cell: SharedOnce<Vec<usize>> = SharedOnce::new();
+        assert!(cell.get().is_none());
+        let a = cell.get_or_init(|| vec![1, 2, 3]);
+        let b = cell.get_or_init(|| vec![9, 9, 9]);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(*b, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clone_carries_the_cached_arc() {
+        let cell: SharedOnce<usize> = SharedOnce::new();
+        let a = cell.get_or_init(|| 7);
+        let cloned = cell.clone();
+        assert!(Arc::ptr_eq(&a, &cloned.get().unwrap()));
+    }
+
+    #[test]
+    fn try_init_retries_after_error() {
+        let cell: SharedOnce<usize> = SharedOnce::new();
+        let err: Result<Arc<usize>, &str> = cell.get_or_try_init(|| Err("nope"));
+        assert!(err.is_err());
+        let ok = cell.get_or_try_init(|| Ok::<usize, &str>(5)).unwrap();
+        assert_eq!(*ok, 5);
+    }
+}

@@ -1,0 +1,177 @@
+//! Property tests for the shared-sparsity matrix model (ISSUE 7 satellite):
+//!
+//! 1. `Sparsity::from_pattern` + `Csr::with_values` stamping is bit-for-bit
+//!    equal to a `Csr::from_triplets` assembly on duplicate-free triplets.
+//! 2. A cached symbolic preconditioner phase refactored onto perturbed
+//!    values applies identically to a from-scratch build, for every kind.
+//! 3. `solve_sequence` (shared workspace + cached symbolic phase) matches
+//!    per-system fresh solves exactly, for both engines.
+
+use skr::la::{Csr, Sparsity};
+use skr::precond::{PrecondKind, Preconditioner};
+use skr::solver::{gcrodr, gmres, solve_sequence, Engine, LinearSystem, Recycler, SolverConfig};
+use skr::util::prng::Rng;
+use skr::util::propcheck::{check_msg, Config};
+use std::sync::Arc;
+
+/// Random duplicate-free triplets: a guaranteed dominant diagonal plus a
+/// sprinkle of off-diagonal entries, in shuffled insertion order.
+fn random_triplets(rng: &mut Rng) -> (usize, Vec<(usize, usize, f64)>) {
+    let n = 5 + rng.below(25);
+    let mut trips = Vec::new();
+    for i in 0..n {
+        trips.push((i, i, 4.0 + rng.uniform()));
+        for j in 0..n {
+            if j != i && rng.uniform() < 0.15 {
+                trips.push((i, j, rng.normal()));
+            }
+        }
+    }
+    rng.shuffle(&mut trips);
+    (n, trips)
+}
+
+#[test]
+fn stamping_matches_from_triplets_bitwise() {
+    check_msg(
+        "with_values == from_triplets",
+        Config { cases: 64, seed: 0x5A11 },
+        random_triplets,
+        |(n, trips)| {
+            let m1 = Csr::from_triplets(*n, *n, trips);
+            let pairs: Vec<(usize, usize)> = trips.iter().map(|&(r, c, _)| (r, c)).collect();
+            let sp = Arc::new(Sparsity::from_pattern(*n, *n, &pairs));
+            let mut vals = vec![0.0; sp.nnz()];
+            for &(r, c, v) in trips {
+                vals[sp.pos(r, c).ok_or_else(|| format!("missing ({r},{c})"))?] = v;
+            }
+            let m2 = Csr::with_values(sp, vals).map_err(|e| e.to_string())?;
+            if **m1.sparsity() != **m2.sparsity() {
+                return Err("patterns differ".into());
+            }
+            for (i, (a, b)) in m1.values().iter().zip(m2.values()).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("value {i}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Symmetric, diagonally dominant tridiagonal base — valid input for every
+/// preconditioner kind, including IC(0).
+fn lap1d(n: usize) -> Csr {
+    let mut trips = Vec::new();
+    for i in 0..n {
+        trips.push((i, i, 4.0));
+        if i > 0 {
+            trips.push((i, i - 1, -1.0));
+        }
+        if i + 1 < n {
+            trips.push((i, i + 1, -1.0));
+        }
+    }
+    Csr::from_triplets(n, n, &trips)
+}
+
+#[test]
+fn symbolic_reuse_applies_identically_across_perturbations() {
+    let n = 60;
+    let base = lap1d(n);
+    let sp = base.sparsity().clone();
+    // One symbolic phase per kind, built once and reused for all 50 cases.
+    let symbolics: Vec<(PrecondKind, skr::precond::SymbolicPrecond)> =
+        PrecondKind::ALL.iter().map(|k| (*k, k.symbolic(&sp).unwrap())).collect();
+    let r_in: Vec<f64> = Rng::new(99).normals(n);
+    check_msg(
+        "cached symbolic == fresh build",
+        Config { cases: 50, seed: 0xD1A6 },
+        |rng| {
+            // Perturb the diagonal only: keeps symmetry (ICC's main path)
+            // and diagonal dominance, and exercises a fresh value vector.
+            let mut vals = base.values().to_vec();
+            for i in 0..n {
+                vals[base.sparsity().diag_pos(i).unwrap()] = 4.0 + rng.uniform();
+            }
+            vals
+        },
+        |vals| {
+            let a = Csr::with_values(sp.clone(), vals.clone()).map_err(|e| e.to_string())?;
+            for (kind, sym) in &symbolics {
+                let fresh = kind.build(&a).map_err(|e| e.to_string())?;
+                let cached = sym.refactor(&a).map_err(|e| e.to_string())?;
+                let mut z1 = vec![0.0; n];
+                let mut z2 = vec![0.0; n];
+                fresh.apply(&r_in, &mut z1);
+                cached.apply(&r_in, &mut z2);
+                for (i, (u, v)) in z1.iter().zip(&z2).enumerate() {
+                    if u.to_bits() != v.to_bits() {
+                        return Err(format!("{kind:?} apply[{i}]: {u} vs {v}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A mildly nonsymmetric sequence sharing one `Arc<Sparsity>` — values
+/// scaled per system, right-hand sides random.
+fn shared_sequence(n: usize, count: usize) -> Vec<LinearSystem> {
+    let mut trips = Vec::new();
+    for i in 0..n {
+        trips.push((i, i, 4.0));
+        if i > 0 {
+            trips.push((i, i - 1, -1.2));
+        }
+        if i + 1 < n {
+            trips.push((i, i + 1, -0.8));
+        }
+    }
+    let base = Csr::from_triplets(n, n, &trips);
+    let sp = base.sparsity().clone();
+    let mut rng = Rng::new(0xBEEF);
+    (0..count)
+        .map(|i| {
+            let mut vals = base.values().to_vec();
+            for v in &mut vals {
+                *v *= 1.0 + 0.03 * i as f64;
+            }
+            let a = Csr::with_values(sp.clone(), vals).unwrap();
+            LinearSystem { id: i, a, b: rng.normals(n), params: vec![i as f64] }
+        })
+        .collect()
+}
+
+#[test]
+fn solve_sequence_matches_fresh_per_system_solves() {
+    let systems = shared_sequence(150, 4);
+    let cfg = SolverConfig::default().with_tol(1e-9).with_m(20).with_k(5);
+    for engine in [Engine::Gmres, Engine::SkrRecycle] {
+        let pooled = solve_sequence(&systems, engine, PrecondKind::Ilu, &cfg).unwrap();
+        // Fresh baseline: per-system preconditioner build and solver-internal
+        // scratch; the recycler is shared because recycling is the algorithm,
+        // not a cache.
+        let mut rec = Recycler::new();
+        for (i, sys) in systems.iter().enumerate() {
+            let p = PrecondKind::Ilu.build(&sys.a).unwrap();
+            let mut x = vec![0.0; sys.b.len()];
+            let s = match engine {
+                Engine::Gmres => gmres(&sys.a, &sys.b, &mut x, p.as_ref(), &cfg),
+                Engine::SkrRecycle => gcrodr(&sys.a, &sys.b, &mut x, p.as_ref(), &cfg, &mut rec),
+            };
+            let (px, ps) = &pooled[i];
+            assert_eq!(s.iters, ps.iters, "{engine:?} sys {i}");
+            assert_eq!(s.stop, ps.stop, "{engine:?} sys {i}");
+            assert_eq!(
+                s.rel_residual.to_bits(),
+                ps.rel_residual.to_bits(),
+                "{engine:?} sys {i} residual"
+            );
+            for (j, (u, v)) in x.iter().zip(px).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "{engine:?} sys {i} x[{j}]: {u} vs {v}");
+            }
+        }
+    }
+}
