@@ -1,0 +1,129 @@
+//! Cooperative run control — shared between a [`super::Pipeline`] run and
+//! whoever supervises it (the `skr serve` job workers, a future TUI, tests).
+//!
+//! A [`RunControl`] carries two things across the thread boundary:
+//!
+//! * a **cancellation token**: `cancel()` flips an atomic flag that every
+//!   solve worker checks *between* system solves, so a cancelled run stops
+//!   within one solve and never finalizes its dataset;
+//! * **live progress counters**: systems done/total plus the three reuse
+//!   tallies, updated lock-free after each system so `GET /jobs/:id` can
+//!   report mid-flight state without touching the run.
+//!
+//! All counters are monotone and relaxed — readers may lag a solve or two
+//! behind, which is fine for observability.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Cancellation token + live progress counters for one pipeline run.
+#[derive(Debug, Default)]
+pub struct RunControl {
+    cancelled: AtomicBool,
+    total: AtomicUsize,
+    done: AtomicUsize,
+    sparsity_reuse: AtomicUsize,
+    symbolic_reuse: AtomicUsize,
+    workspace_reuse: AtomicUsize,
+}
+
+/// A point-in-time view of a run's progress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProgressSnapshot {
+    pub done: usize,
+    pub total: usize,
+    pub sparsity_reuse: usize,
+    pub symbolic_reuse: usize,
+    pub workspace_reuse: usize,
+}
+
+impl RunControl {
+    pub fn new() -> RunControl {
+        RunControl::default()
+    }
+
+    /// Request cancellation; the run stops after the in-flight system solves.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Called once at run start with the system count.
+    pub fn set_total(&self, total: usize) {
+        self.total.store(total, Ordering::Relaxed);
+    }
+
+    /// Called by a solve worker after each completed system.
+    pub fn note_system(&self, sparsity_reused: bool, symbolic_reused: bool, workspace_reused: bool) {
+        self.done.fetch_add(1, Ordering::Relaxed);
+        if sparsity_reused {
+            self.sparsity_reuse.fetch_add(1, Ordering::Relaxed);
+        }
+        if symbolic_reused {
+            self.symbolic_reuse.fetch_add(1, Ordering::Relaxed);
+        }
+        if workspace_reused {
+            self.workspace_reuse.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn progress(&self) -> ProgressSnapshot {
+        ProgressSnapshot {
+            done: self.done.load(Ordering::Relaxed),
+            total: self.total.load(Ordering::Relaxed),
+            sparsity_reuse: self.sparsity_reuse.load(Ordering::Relaxed),
+            symbolic_reuse: self.symbolic_reuse.load(Ordering::Relaxed),
+            workspace_reuse: self.workspace_reuse.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Marker error a cancelled [`super::Pipeline::run_with`] returns; supervisors
+/// downcast (`err.downcast_ref::<Cancelled>()`) to tell cancellation from
+/// genuine failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cancelled;
+
+impl std::fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "run cancelled")
+    }
+}
+
+impl std::error::Error for Cancelled {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let ctl = RunControl::new();
+        ctl.set_total(5);
+        ctl.note_system(true, true, false);
+        ctl.note_system(false, true, true);
+        let p = ctl.progress();
+        assert_eq!(p.done, 2);
+        assert_eq!(p.total, 5);
+        assert_eq!(p.sparsity_reuse, 1);
+        assert_eq!(p.symbolic_reuse, 2);
+        assert_eq!(p.workspace_reuse, 1);
+    }
+
+    #[test]
+    fn cancel_flag_flips_once() {
+        let ctl = RunControl::new();
+        assert!(!ctl.is_cancelled());
+        ctl.cancel();
+        assert!(ctl.is_cancelled());
+    }
+
+    #[test]
+    fn cancelled_error_downcasts() {
+        let e = anyhow::Error::new(Cancelled);
+        assert!(e.downcast_ref::<Cancelled>().is_some());
+        assert_eq!(e.to_string(), "run cancelled");
+    }
+}

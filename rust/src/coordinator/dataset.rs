@@ -70,19 +70,30 @@ impl DatasetWriter {
         self.filled.iter().all(|&f| f)
     }
 
-    /// Write `inputs.npy`, `solutions.npy` and `meta.json`.
+    /// Write `inputs.npy`, `solutions.npy` and `meta.json` — atomically.
+    ///
+    /// All three files land in a `<dir>.tmp` staging directory which is then
+    /// renamed into place, so a crash (or a cancelled service job) mid-write
+    /// can never leave a half-written dataset that [`load`] would misread:
+    /// either the final directory exists with all three files, or it does
+    /// not exist at all.
     pub fn finalize(self, family: &str, extra: Vec<(&str, Json)>) -> Result<DatasetSummary> {
         if !self.complete() {
             let missing = self.filled.iter().filter(|&&f| !f).count();
             bail!("dataset incomplete: {missing} of {} samples missing", self.count);
         }
-        std::fs::create_dir_all(&self.dir)?;
+        let staging = self.dir.with_extension("tmp");
+        // A stale staging dir from a previous crashed run is dead weight.
+        if staging.exists() {
+            std::fs::remove_dir_all(&staging)?;
+        }
+        std::fs::create_dir_all(&staging)?;
         npy::write(
-            &self.dir.join("inputs.npy"),
+            &staging.join("inputs.npy"),
             &NpyArray::f64(vec![self.count, self.input_dim], self.inputs),
         )?;
         npy::write(
-            &self.dir.join("solutions.npy"),
+            &staging.join("solutions.npy"),
             &NpyArray::f64(vec![self.count, self.sol_dim], self.solutions),
         )?;
         let mut pairs = vec![
@@ -93,7 +104,17 @@ impl DatasetWriter {
             ("field_side", Json::Num(self.field_side as f64)),
         ];
         pairs.extend(extra);
-        std::fs::write(self.dir.join("meta.json"), Json::obj(pairs).dump())?;
+        std::fs::write(staging.join("meta.json"), Json::obj(pairs).dump())?;
+        // Publish: replace any previous dataset at the target path.
+        if self.dir.exists() {
+            std::fs::remove_dir_all(&self.dir)?;
+        }
+        if let Some(parent) = self.dir.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::rename(&staging, &self.dir)?;
         Ok(DatasetSummary {
             dir: self.dir,
             count: self.count,
@@ -114,11 +135,19 @@ pub fn load(dir: &Path) -> Result<(NpyArray, NpyArray, Json)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Unique per-test scratch path: pid + global counter, so concurrently
+    /// running tests (and stale files from killed runs) never collide.
+    fn unique_dir(tag: &str) -> PathBuf {
+        static COUNTER: AtomicUsize = AtomicUsize::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("skr_ds_{tag}_{}_{n}", std::process::id()))
+    }
 
     #[test]
     fn roundtrip_out_of_order() {
-        let dir = std::env::temp_dir().join("skr_ds_test_1");
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = unique_dir("roundtrip");
         let mut w = DatasetWriter::new(&dir, 3, 2, 4, 2);
         w.put(2, &[5.0, 6.0], &[1.0, 2.0, 3.0, 4.0]).unwrap();
         w.put(0, &[1.0, 2.0], &[0.0; 4]).unwrap();
@@ -131,15 +160,52 @@ mod tests {
         assert_eq!(sols.shape, vec![3, 4]);
         assert_eq!(&ins.data[4..6], &[5.0, 6.0]);
         assert_eq!(meta.get("family").unwrap().as_str(), Some("darcy"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn rejects_double_write_and_incomplete() {
-        let dir = std::env::temp_dir().join("skr_ds_test_2");
+        let dir = unique_dir("rejects");
         let mut w = DatasetWriter::new(&dir, 2, 1, 1, 0);
         w.put(0, &[1.0], &[2.0]).unwrap();
         assert!(w.put(0, &[1.0], &[2.0]).is_err());
         assert!(w.put(5, &[1.0], &[2.0]).is_err());
         assert!(w.finalize("x", vec![]).is_err());
+        // A failed finalize must not publish the dataset directory.
+        assert!(!dir.exists());
+    }
+
+    #[test]
+    fn finalize_is_atomic_no_staging_left_behind() {
+        let dir = unique_dir("atomic");
+        let staging = dir.with_extension("tmp");
+        // A stale staging dir from a crashed run gets cleaned up.
+        std::fs::create_dir_all(&staging).unwrap();
+        std::fs::write(staging.join("inputs.npy"), b"garbage").unwrap();
+        let mut w = DatasetWriter::new(&dir, 1, 1, 1, 0);
+        w.put(0, &[1.0], &[2.0]).unwrap();
+        w.finalize("darcy", vec![]).unwrap();
+        assert!(dir.join("inputs.npy").exists());
+        assert!(dir.join("solutions.npy").exists());
+        assert!(dir.join("meta.json").exists());
+        assert!(!staging.exists(), "staging dir must be renamed away");
+        let (ins, _, _) = load(&dir).unwrap();
+        assert_eq!(ins.data, vec![1.0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn finalize_replaces_existing_dataset() {
+        let dir = unique_dir("replace");
+        let mut w = DatasetWriter::new(&dir, 1, 1, 1, 0);
+        w.put(0, &[1.0], &[2.0]).unwrap();
+        w.finalize("darcy", vec![]).unwrap();
+        let mut w2 = DatasetWriter::new(&dir, 1, 1, 1, 0);
+        w2.put(0, &[7.0], &[8.0]).unwrap();
+        w2.finalize("darcy", vec![]).unwrap();
+        let (ins, sols, _) = load(&dir).unwrap();
+        assert_eq!(ins.data, vec![7.0]);
+        assert_eq!(sols.data, vec![8.0]);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -4,6 +4,7 @@
 //! the δ-subspace instrumentation behind the ablation study.
 
 pub mod config;
+pub mod control;
 pub mod dataset;
 pub mod delta;
 pub mod metrics;
@@ -12,5 +13,6 @@ pub mod scheduler;
 pub mod sorter;
 
 pub use config::PipelineConfig;
+pub use control::{Cancelled, ProgressSnapshot, RunControl};
 pub use pipeline::{Pipeline, PipelineResult, WorkerReport};
 pub use sorter::SortStrategy;

@@ -24,6 +24,7 @@
 //! `run` event.
 
 use super::config::PipelineConfig;
+use super::control::{Cancelled, RunControl};
 use super::dataset::{DatasetSummary, DatasetWriter};
 use super::delta::{delta_between, DeltaTracker};
 use super::metrics::RunMetrics;
@@ -109,8 +110,20 @@ impl Pipeline {
 
     /// Run the full pipeline.
     pub fn run(&self) -> Result<PipelineResult> {
+        self.run_with(&RunControl::new())
+    }
+
+    /// Run the full pipeline under external supervision.
+    ///
+    /// `ctl` carries a cooperative cancellation token — checked between
+    /// system solves, so a cancelled run stops within one solve, skips
+    /// dataset finalization, and returns `Err` downcastable to
+    /// [`Cancelled`] — and live progress counters (systems done/total plus
+    /// the reuse tallies) that another thread may read mid-run.
+    pub fn run_with(&self, ctl: &RunControl) -> Result<PipelineResult> {
         let wall = Timer::start();
         let cfg = &self.cfg;
+        ctl.set_total(cfg.count);
         let master = Rng::new(cfg.seed);
         let recorder = Recorder::new();
         let sink = match &cfg.trace_out {
@@ -182,6 +195,7 @@ impl Pipeline {
                         sink_ref,
                         progress,
                         recorder,
+                        ctl,
                     )
                 }));
             }
@@ -201,6 +215,12 @@ impl Pipeline {
         })?;
         recorder.record("solve", None, solve_start, recorder.now() - solve_start);
         progress.finish();
+
+        // Cancelled: drop all partial work on the floor — in particular the
+        // dataset is never finalized, so no (partial) directory appears.
+        if ctl.is_cancelled() {
+            return Err(anyhow::Error::new(Cancelled));
+        }
 
         // 5. Assemble.
         let mut metrics = RunMetrics::default();
@@ -317,6 +337,7 @@ fn solve_batch(
     sink: Option<&TraceSink>,
     progress: &Progress,
     recorder: &Recorder,
+    ctl: &RunControl,
 ) -> Result<WorkerOutput> {
     let worker_start = recorder.now();
     let mut rec = Recycler::new();
@@ -331,15 +352,25 @@ fn solve_batch(
     let mut busy_seconds = 0.0;
     let mut backpressure_seconds = 0.0;
     for &id in batch {
+        // Cooperative cancellation point: a cancelled run stops before the
+        // next system, i.e. within one solve of the cancel request.
+        if ctl.is_cancelled() {
+            break;
+        }
+        let ws_reuse_before = ws.reuse_count();
         let sys = family.sample(id, &mut master.split(id as u64))?;
-        if prev_sparsity.as_ref().is_some_and(|sp| Arc::ptr_eq(sp, sys.a.sparsity())) {
+        let sparsity_reused =
+            prev_sparsity.as_ref().is_some_and(|sp| Arc::ptr_eq(sp, sys.a.sparsity()));
+        if sparsity_reused {
             sparsity_reuse += 1;
         } else {
             prev_sparsity = Some(sys.a.sparsity().clone());
         }
+        let mut symbolic_reused = false;
         let sym = match symbolic.take() {
             Some(s) if s.matches(&sys.a) => {
                 symbolic_reuse += 1;
+                symbolic_reused = true;
                 s
             }
             _ => cfg.precond.symbolic(sys.a.sparsity())?,
@@ -420,6 +451,7 @@ fn solve_batch(
             backpressure_seconds += recorder.now() - send_start;
         }
         progress.tick(s.iters, matches!(s.stop, StopReason::MaxIters));
+        ctl.note_system(sparsity_reused, symbolic_reused, ws.reuse_count() > ws_reuse_before);
         stats.push((id, s));
     }
     let wall_seconds = recorder.now() - worker_start;

@@ -60,4 +60,67 @@ mod tests {
         assert_eq!(shards[0], vec![0, 2, 4]);
         assert_eq!(shards[1], vec![1, 3, 5]);
     }
+
+    #[test]
+    fn empty_order_yields_one_empty_shard() {
+        for workers in [1, 4, 100] {
+            let shards = shard(&[], workers);
+            assert_eq!(shards.len(), 1, "shard(&[], {workers})");
+            assert!(shards[0].is_empty());
+            let shards = shard_interleaved(&[], workers);
+            assert_eq!(shards.len(), 1, "shard_interleaved(&[], {workers})");
+            assert!(shards[0].is_empty());
+        }
+        // workers = 0 clamps up to 1 rather than dividing by zero.
+        assert_eq!(shard(&[7, 8], 0), vec![vec![7, 8]]);
+        assert_eq!(shard_interleaved(&[7, 8], 0), vec![vec![7, 8]]);
+    }
+
+    /// Property: sharding any order under any worker count is a *partition* —
+    /// every id appears in exactly one shard, and no shard is introduced or
+    /// dropped beyond the clamped worker count.
+    #[test]
+    fn sharding_is_a_partition() {
+        use crate::util::propcheck::{check_msg, Config};
+        let verify = |order: &[usize], workers: usize, shards: &[Vec<usize>]| -> Result<(), String> {
+            let expect = workers.clamp(1, order.len().max(1));
+            if shards.len() != expect {
+                return Err(format!("{} shards, expected {expect}", shards.len()));
+            }
+            let mut flat: Vec<usize> = shards.iter().flatten().copied().collect();
+            flat.sort_unstable();
+            let mut want = order.to_vec();
+            want.sort_unstable();
+            if flat != want {
+                return Err(format!("not a partition: {flat:?} vs {want:?}"));
+            }
+            Ok(())
+        };
+        check_msg(
+            "shard-partition",
+            Config { cases: 128, seed: 0x5AAD },
+            |rng| {
+                let n = (rng.uniform() * 40.0) as usize;
+                let workers = (rng.uniform() * 12.0) as usize;
+                // A permutation of 0..n (what sort_order produces).
+                let mut order: Vec<usize> = (0..n).collect();
+                for i in (1..n).rev() {
+                    let j = (rng.uniform() * (i + 1) as f64) as usize % (i + 1);
+                    order.swap(i, j);
+                }
+                (order, workers)
+            },
+            |(order, workers)| {
+                verify(order, *workers, &shard(order, *workers))?;
+                verify(order, *workers, &shard_interleaved(order, *workers))?;
+                // Contiguous sharding additionally preserves the solve order.
+                let flat: Vec<usize> =
+                    shard(order, *workers).iter().flatten().copied().collect();
+                if flat != *order {
+                    return Err(format!("contiguous shard reordered: {flat:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
 }

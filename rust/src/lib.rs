@@ -40,6 +40,8 @@
 //!   `Workspace` + cached symbolic preconditioner + recycler per shard.
 //! * [`obs`] — spans, JSONL traces, histograms and the structure/symbolic/
 //!   workspace reuse counters surfaced by `skr report`.
+//! * [`service`] — the `skr serve` daemon: HTTP/JSON job queue over the
+//!   pipeline with cancellation, crash-safe journaling and live `/metrics`.
 //! * [`harness`], [`no`], [`runtime`] — paper tables/figures, the FNO, PJRT.
 //!
 //! The public entry points a downstream user needs:
@@ -62,6 +64,7 @@ pub mod obs;
 pub mod pde;
 pub mod precond;
 pub mod runtime;
+pub mod service;
 pub mod solver;
 pub mod util;
 

@@ -11,10 +11,14 @@
 //! * `train`     — train the FNO on a generated dataset via the PJRT runtime
 //! * `validate`  — reproduce Table 33 (dataset-validity experiment)
 //! * `report`    — aggregate a `--trace-out` JSONL trace into a summary
+//! * `serve`     — resident job-queue daemon with an HTTP/JSON API
+//! * `submit` / `jobs` / `status` / `cancel` — thin clients for `serve`
 
 use skr::coordinator::{Pipeline, PipelineConfig};
 use skr::harness;
+use skr::service;
 use skr::util::args::Args;
+use skr::util::json::Json;
 
 fn main() {
     let args = Args::from_env();
@@ -30,6 +34,11 @@ fn main() {
         "train" => harness::train::run(&args),
         "validate" => harness::validate::run(&args),
         "report" => skr::obs::report::run(&args),
+        "serve" => service::serve(&service::ServeConfig::from_args(&args)),
+        "submit" => cmd_submit(&args),
+        "jobs" => cmd_jobs(&args),
+        "status" => cmd_status(&args),
+        "cancel" => cmd_cancel(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -112,6 +121,96 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn service_addr(args: &Args) -> String {
+    args.str_or("addr", "127.0.0.1:7070")
+}
+
+/// One API round-trip; non-2xx surfaces the server's error body.
+fn api_call(args: &Args, method: &str, path: &str, body: Option<&str>) -> anyhow::Result<Json> {
+    let addr = service_addr(args);
+    let (status, text) = skr::service::http::request(&addr, method, path, body)?;
+    let json = Json::parse(&text).unwrap_or(Json::Str(text.clone()));
+    if !(200..300).contains(&status) {
+        let msg = json.get("error").and_then(|e| e.as_str()).unwrap_or(&text);
+        anyhow::bail!("{addr} answered {status}: {msg}");
+    }
+    Ok(json)
+}
+
+fn job_id_arg(args: &Args) -> anyhow::Result<u64> {
+    args.positional()
+        .first()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("usage: skr status|cancel <job-id> [--addr HOST:PORT]"))
+}
+
+fn cmd_submit(args: &Args) -> anyhow::Result<()> {
+    let spec = service::JobSpec::from_args(args);
+    let resp = api_call(args, "POST", "/jobs", Some(&spec.to_json().dump()))?;
+    let id = resp.get("id").and_then(|v| v.as_usize()).unwrap_or(0);
+    println!("job {id} queued ({} {} count={})", spec.family, spec.engine, spec.count);
+    println!("poll with: skr status {id} --addr {}", service_addr(args));
+    Ok(())
+}
+
+fn cmd_jobs(args: &Args) -> anyhow::Result<()> {
+    let resp = api_call(args, "GET", "/jobs", None)?;
+    let jobs = resp.get("jobs").and_then(|j| j.as_arr()).unwrap_or(&[]);
+    println!(
+        "{} job(s), {} queued, {} running{}",
+        jobs.len(),
+        resp.get("queued").and_then(|v| v.as_usize()).unwrap_or(0),
+        resp.get("running").and_then(|v| v.as_usize()).unwrap_or(0),
+        if resp.get("draining") == Some(&Json::Bool(true)) { " (draining)" } else { "" },
+    );
+    for j in jobs {
+        print_job_line(j);
+    }
+    Ok(())
+}
+
+fn cmd_status(args: &Args) -> anyhow::Result<()> {
+    let id = job_id_arg(args)?;
+    let resp = api_call(args, "GET", &format!("/jobs/{id}"), None)?;
+    print_job_line(&resp);
+    if let Some(err) = resp.get("error").and_then(|e| e.as_str()) {
+        println!("  error: {err}");
+    }
+    if let Some(ds) = resp.get("dataset").and_then(|d| d.as_str()) {
+        println!("  dataset: {ds}");
+    }
+    Ok(())
+}
+
+fn cmd_cancel(args: &Args) -> anyhow::Result<()> {
+    let id = job_id_arg(args)?;
+    let resp = api_call(args, "DELETE", &format!("/jobs/{id}"), None)?;
+    println!(
+        "job {id}: {}",
+        resp.get("state").and_then(|s| s.as_str()).unwrap_or("unknown")
+    );
+    Ok(())
+}
+
+fn print_job_line(j: &Json) {
+    let get_n = |outer: &Json, key: &str| outer.get(key).and_then(|v| v.as_usize()).unwrap_or(0);
+    let progress = j.get("progress").cloned().unwrap_or(Json::Null);
+    let spec = j.get("spec").cloned().unwrap_or(Json::Null);
+    println!(
+        "job {:>4}  {:<10} {}/{} systems  family={} n={} seed={}  reuse s/y/w {}/{}/{}",
+        get_n(j, "id"),
+        j.get("state").and_then(|s| s.as_str()).unwrap_or("?"),
+        get_n(&progress, "done"),
+        get_n(&progress, "total"),
+        spec.get("family").and_then(|s| s.as_str()).unwrap_or("?"),
+        get_n(&spec, "n"),
+        get_n(&spec, "seed"),
+        get_n(&progress, "sparsity_reuse"),
+        get_n(&progress, "symbolic_reuse"),
+        get_n(&progress, "workspace_reuse"),
+    );
+}
+
 fn print_help() {
     println!(
         "skr — Sorting + Krylov Recycling data generation for neural operators
@@ -141,6 +240,20 @@ COMMANDS
   report     aggregate a trace: skr report t.jsonl [--prometheus]
              (percentile solve times, iteration histogram, per-worker
              timeline/utilization, backpressure totals)
+
+SERVICE (see README \"Running as a service\")
+  serve      resident job-queue daemon with an HTTP/JSON API
+             --host 127.0.0.1 --port 7070 (0 = ephemeral)
+             --workers 1          concurrent jobs
+             --queue-cap 64       pending backlog before 429
+             --state-dir results/service   journal.jsonl location
+             endpoints: POST/GET /jobs, GET/DELETE /jobs/:id,
+             GET /metrics, GET /healthz, POST /shutdown (graceful drain)
+  submit     enqueue a generation job (same flags as generate, plus --addr)
+             skr submit --addr 127.0.0.1:7070 --family darcy --count 64 --out DIR
+  jobs       list jobs + queue state          [--addr HOST:PORT]
+  status     one job incl. live progress:     skr status <id> [--addr ...]
+  cancel     cancel a queued or running job:  skr cancel <id> [--addr ...]
 "
     );
 }

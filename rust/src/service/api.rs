@@ -1,0 +1,381 @@
+//! The `skr serve` JSON API: the job-spec wire format and the route table.
+//!
+//! | Method & path      | Meaning                                   |
+//! |--------------------|-------------------------------------------|
+//! | `POST /jobs`       | submit a generation job (202 / 429 / 503) |
+//! | `GET /jobs`        | list all jobs + queue state               |
+//! | `GET /jobs/:id`    | one job incl. live progress               |
+//! | `DELETE /jobs/:id` | cancel (queued or in-flight)              |
+//! | `GET /metrics`     | Prometheus text (aggregate + service)     |
+//! | `GET /healthz`     | liveness                                  |
+//! | `POST /shutdown`   | graceful drain                            |
+//!
+//! All bodies are [`Json`] from `util::json` — the same parser the journal
+//! and trace files use, hardened against malformed input since request
+//! bodies are untrusted.
+
+use super::http::{Request, Response};
+use super::queue::{CancelResult, JobView, SubmitRejected};
+use super::Service;
+use crate::coordinator::{PipelineConfig, SortStrategy};
+use crate::pde::FamilyKind;
+use crate::precond::PrecondKind;
+use crate::solver::Engine;
+use crate::util::args::Args;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// A generation job as submitted over the wire — deliberately stored as the
+/// user's strings/numbers (not parsed enums) so the journal round-trips
+/// exactly; [`JobSpec::to_config`] validates and lowers to [`PipelineConfig`]
+/// with the *same defaults* as `skr generate`, keeping service output
+/// byte-identical to the batch CLI for the same spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub family: String,
+    pub unknowns: usize,
+    pub count: usize,
+    pub engine: String,
+    pub precond: String,
+    pub sort: String,
+    pub threads: usize,
+    pub tol: f64,
+    pub m: usize,
+    pub k: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+    /// Dataset output directory (None = solve but export nothing).
+    pub out: Option<String>,
+    pub grf_alpha: Option<f64>,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        // Mirrors `PipelineConfig::from_args` defaults field by field.
+        JobSpec {
+            family: "darcy".into(),
+            unknowns: 2500,
+            count: 64,
+            engine: "skr".into(),
+            precond: "none".into(),
+            sort: "greedy".into(),
+            threads: 1,
+            tol: 1e-8,
+            m: 30,
+            k: 10,
+            max_iters: 10_000,
+            seed: 0,
+            out: None,
+            grf_alpha: None,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Build from CLI args (`skr submit` shares `skr generate`'s flags).
+    pub fn from_args(args: &Args) -> JobSpec {
+        let d = JobSpec::default();
+        JobSpec {
+            family: args.str_or("family", &d.family),
+            unknowns: args.num_or("n", d.unknowns),
+            count: args.num_or("count", d.count),
+            engine: args.str_or("engine", &d.engine),
+            precond: args.str_or("precond", &d.precond),
+            sort: args.str_or("sort", &d.sort),
+            threads: args.num_or("threads", d.threads).max(1),
+            tol: args.num_or("tol", d.tol),
+            m: args.num_or("m", d.m),
+            k: args.num_or("k", d.k),
+            max_iters: args.num_or("max-iters", d.max_iters),
+            seed: args.num_or("seed", d.seed),
+            out: args.get("out").map(str::to_string),
+            grf_alpha: args.get("grf-alpha").and_then(|v| v.parse().ok()),
+        }
+    }
+
+    /// Parse from an untrusted request body; unknown keys are ignored,
+    /// missing keys fall back to the `skr generate` defaults.
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        if !matches!(j, Json::Obj(_)) {
+            bail!("job spec must be a JSON object");
+        }
+        let d = JobSpec::default();
+        let str_or = |key: &str, dflt: &str| -> Result<String> {
+            match j.get(key) {
+                None => Ok(dflt.to_string()),
+                Some(v) => {
+                    Ok(v.as_str().with_context(|| format!("{key:?} must be a string"))?.to_string())
+                }
+            }
+        };
+        let num_or = |key: &str, dflt: f64| -> Result<f64> {
+            match j.get(key) {
+                None => Ok(dflt),
+                Some(v) => v.as_f64().with_context(|| format!("{key:?} must be a number")),
+            }
+        };
+        let usize_or = |key: &str, dflt: usize| -> Result<usize> {
+            let v = num_or(key, dflt as f64)?;
+            if v < 0.0 || v.fract() != 0.0 {
+                bail!("{key:?} must be a non-negative integer, got {v}");
+            }
+            Ok(v as usize)
+        };
+        Ok(JobSpec {
+            family: str_or("family", &d.family)?,
+            unknowns: usize_or("n", d.unknowns)?,
+            count: usize_or("count", d.count)?,
+            engine: str_or("engine", &d.engine)?,
+            precond: str_or("precond", &d.precond)?,
+            sort: str_or("sort", &d.sort)?,
+            threads: usize_or("threads", d.threads)?.max(1),
+            tol: num_or("tol", d.tol)?,
+            m: usize_or("m", d.m)?,
+            k: usize_or("k", d.k)?,
+            max_iters: usize_or("max_iters", d.max_iters)?,
+            seed: usize_or("seed", d.seed as usize)? as u64,
+            out: j.get("out").and_then(|v| v.as_str()).map(str::to_string),
+            grf_alpha: j.get("grf_alpha").and_then(|v| v.as_f64()),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("family", Json::Str(self.family.clone())),
+            ("n", Json::Num(self.unknowns as f64)),
+            ("count", Json::Num(self.count as f64)),
+            ("engine", Json::Str(self.engine.clone())),
+            ("precond", Json::Str(self.precond.clone())),
+            ("sort", Json::Str(self.sort.clone())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("tol", Json::Num(self.tol)),
+            ("m", Json::Num(self.m as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("max_iters", Json::Num(self.max_iters as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ];
+        if let Some(out) = &self.out {
+            pairs.push(("out", Json::Str(out.clone())));
+        }
+        if let Some(a) = self.grf_alpha {
+            pairs.push(("grf_alpha", Json::Num(a)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Validate and lower to a [`PipelineConfig`] (the submit handler calls
+    /// this so bad specs are rejected with 400 before they ever enqueue).
+    pub fn to_config(&self) -> Result<PipelineConfig> {
+        let mut cfg = PipelineConfig {
+            family: FamilyKind::parse(&self.family)?,
+            unknowns: self.unknowns,
+            count: self.count,
+            engine: Engine::parse(&self.engine)?,
+            precond: PrecondKind::parse(&self.precond)?,
+            sort: SortStrategy::parse(&self.sort)?,
+            threads: self.threads.max(1),
+            seed: self.seed,
+            out_dir: self.out.as_ref().map(std::path::PathBuf::from),
+            grf_alpha: self.grf_alpha,
+            ..Default::default()
+        };
+        if self.count == 0 {
+            bail!("count must be at least 1");
+        }
+        cfg.solver.tol = self.tol;
+        cfg.solver.m = self.m;
+        cfg.solver.k = self.k;
+        cfg.solver.max_iters = self.max_iters;
+        Ok(cfg)
+    }
+}
+
+/// One job rendered for the API.
+pub fn job_json(v: &JobView) -> Json {
+    let p = &v.progress;
+    Json::obj(vec![
+        ("id", Json::Num(v.id as f64)),
+        ("state", Json::Str(v.state.label().to_string())),
+        ("spec", v.spec.to_json()),
+        (
+            "progress",
+            Json::obj(vec![
+                ("done", Json::Num(p.done as f64)),
+                ("total", Json::Num(p.total as f64)),
+                ("sparsity_reuse", Json::Num(p.sparsity_reuse as f64)),
+                ("symbolic_reuse", Json::Num(p.symbolic_reuse as f64)),
+                ("workspace_reuse", Json::Num(p.workspace_reuse as f64)),
+            ]),
+        ),
+        ("error", v.error.clone().map_or(Json::Null, Json::Str)),
+        ("dataset", v.dataset.clone().map_or(Json::Null, Json::Str)),
+    ])
+}
+
+fn err_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).dump()
+}
+
+/// Dispatch one request against the service.
+pub fn handle(svc: &Service, req: &Request) -> Response {
+    let segs = req.segments();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => Response::json(
+            200,
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("draining", Json::Bool(svc.queue.is_draining())),
+            ])
+            .dump(),
+        ),
+        ("GET", ["metrics"]) => Response::text(200, svc.metrics_text()),
+        ("POST", ["jobs"]) => submit(svc, req),
+        ("GET", ["jobs"]) => {
+            let views = svc.queue.list();
+            let jobs: Vec<Json> = views.iter().map(job_json).collect();
+            Response::json(
+                200,
+                Json::obj(vec![
+                    ("jobs", Json::Arr(jobs)),
+                    ("queued", Json::Num(svc.queue.queued_len() as f64)),
+                    ("running", Json::Num(svc.queue.running_len() as f64)),
+                    ("draining", Json::Bool(svc.queue.is_draining())),
+                ])
+                .dump(),
+            )
+        }
+        ("GET", ["jobs", id]) => match parse_id(id) {
+            Some(id) => match svc.queue.get(id) {
+                Some(v) => Response::json(200, job_json(&v).dump()),
+                None => Response::json(404, err_body(&format!("no job {id}"))),
+            },
+            None => Response::json(400, err_body("job id must be an integer")),
+        },
+        ("DELETE", ["jobs", id]) => match parse_id(id) {
+            Some(id) => cancel(svc, id),
+            None => Response::json(400, err_body("job id must be an integer")),
+        },
+        ("POST", ["shutdown"]) => {
+            svc.begin_drain();
+            Response::json(200, Json::obj(vec![("draining", Json::Bool(true))]).dump())
+        }
+        ("GET" | "POST" | "DELETE", _) => Response::json(404, err_body("no such endpoint")),
+        _ => Response::json(405, err_body("method not allowed")),
+    }
+}
+
+fn parse_id(s: &str) -> Option<u64> {
+    s.parse().ok()
+}
+
+fn submit(svc: &Service, req: &Request) -> Response {
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(s) => s,
+        Err(_) => return Response::json(400, err_body("body must be UTF-8 JSON")),
+    };
+    let parsed = if body.trim().is_empty() { Ok(Json::obj(vec![])) } else { Json::parse(body) };
+    let spec = match parsed.and_then(|j| JobSpec::from_json(&j)) {
+        Ok(spec) => spec,
+        Err(e) => return Response::json(400, err_body(&format!("bad job spec: {e:#}"))),
+    };
+    // Reject invalid configs before they occupy a queue slot.
+    if let Err(e) = spec.to_config() {
+        return Response::json(400, err_body(&format!("bad job spec: {e:#}")));
+    }
+    match svc.submit(spec) {
+        Ok(id) => Response::json(
+            202,
+            Json::obj(vec![("id", Json::Num(id as f64)), ("state", Json::Str("queued".into()))])
+                .dump(),
+        ),
+        Err(SubmitRejected::Full) => Response::json(429, err_body("job queue is full"))
+            .with_header("Retry-After", "1"),
+        Err(SubmitRejected::Draining) => {
+            Response::json(503, err_body("service is draining"))
+        }
+    }
+}
+
+fn cancel(svc: &Service, id: u64) -> Response {
+    match svc.cancel(id) {
+        CancelResult::NotFound => Response::json(404, err_body(&format!("no job {id}"))),
+        CancelResult::AlreadyTerminal(state) => Response::json(
+            409,
+            Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("state", Json::Str(state.label().to_string())),
+                ("error", Json::Str("job already finished".into())),
+            ])
+            .dump(),
+        ),
+        CancelResult::CancelledQueued => Response::json(
+            200,
+            Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("state", Json::Str("cancelled".into())),
+            ])
+            .dump(),
+        ),
+        CancelResult::CancellingRunning => Response::json(
+            202,
+            Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("state", Json::Str("cancelling".into())),
+            ])
+            .dump(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let mut spec = JobSpec::default();
+        spec.family = "helmholtz".into();
+        spec.unknowns = 400;
+        spec.count = 7;
+        spec.out = Some("results/x".into());
+        spec.grf_alpha = Some(2.5);
+        let back = JobSpec::from_json(&Json::parse(&spec.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn empty_spec_uses_generate_defaults() {
+        let spec = JobSpec::from_json(&Json::obj(vec![])).unwrap();
+        let cfg = spec.to_config().unwrap();
+        let d = PipelineConfig::default();
+        assert_eq!(cfg.family, d.family);
+        assert_eq!(cfg.unknowns, d.unknowns);
+        assert_eq!(cfg.count, d.count);
+        assert!((cfg.solver.tol - 1e-8).abs() < 1e-20);
+        assert_eq!(cfg.solver.m, 30);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in [
+            r#"{"family":"nope"}"#,
+            r#"{"engine":17}"#,
+            r#"{"count":-3}"#,
+            r#"{"n":2.5}"#,
+            r#"{"count":0}"#,
+        ] {
+            let r = Json::parse(bad)
+                .map_err(anyhow::Error::from)
+                .and_then(|j| JobSpec::from_json(&j))
+                .and_then(|s| s.to_config());
+            assert!(r.is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn from_args_matches_defaults() {
+        let args = Args::parse(std::iter::empty());
+        let spec = JobSpec::from_args(&args);
+        assert_eq!(spec, JobSpec::default());
+    }
+}

@@ -1,0 +1,235 @@
+//! Minimal HTTP/1.1 framing over `TcpStream` — just enough for the `skr
+//! serve` JSON API and its thin CLI clients (std-only; one request per
+//! connection, `Connection: close` semantics).
+//!
+//! Untrusted input discipline: the request line, header block and body are
+//! all length-capped, and every parse failure surfaces as `Err` (the caller
+//! answers 400) rather than a panic.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Largest accepted header block (request line + headers).
+const MAX_HEAD: usize = 16 * 1024;
+/// Largest accepted request/response body.
+pub const MAX_BODY: usize = 4 * 1024 * 1024;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without query string.
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Split the path into non-empty segments: `/jobs/7` → `["jobs", "7"]`.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// Extra headers, e.g. `("Retry-After", "1")`.
+    pub headers: Vec<(String, String)>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json", body: body.into_bytes(), headers: vec![] }
+    }
+
+    pub fn text(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            body: body.into_bytes(),
+            headers: vec![],
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            202 => "Accepted",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            413 => "Payload Too Large",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+}
+
+/// Read one request off the stream (bounded, with a read timeout set by the
+/// caller on the socket).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let head = read_until_blank_line(stream)?;
+    let head_text = std::str::from_utf8(&head).context("non-UTF8 request head")?;
+    let mut lines = head_text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let target = parts.next().unwrap_or("");
+    if method.is_empty() || !target.starts_with('/') {
+        bail!("malformed request line {request_line:?}");
+    }
+    let path = target.split('?').next().unwrap_or("/").to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.trim().parse().context("bad Content-Length")?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        bail!("body of {content_length} bytes exceeds cap {MAX_BODY}");
+    }
+    let mut body = vec![0u8; content_length];
+    stream.read_exact(&mut body).context("reading request body")?;
+    Ok(Request { method, path, body })
+}
+
+/// Write a response and flush; always closes after one exchange.
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        resp.status,
+        resp.reason(),
+        resp.content_type,
+        resp.body.len()
+    );
+    for (name, value) in &resp.headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn read_until_blank_line(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut head = Vec::with_capacity(512);
+    let mut byte = [0u8; 1];
+    loop {
+        let n = stream.read(&mut byte)?;
+        if n == 0 {
+            bail!("connection closed before request head completed");
+        }
+        head.push(byte[0]);
+        if head.ends_with(b"\r\n\r\n") {
+            head.truncate(head.len() - 4);
+            return Ok(head);
+        }
+        if head.len() > MAX_HEAD {
+            bail!("request head exceeds {MAX_HEAD} bytes");
+        }
+    }
+}
+
+/// Client side: one round-trip against `addr` (e.g. `127.0.0.1:7070`).
+/// Returns `(status, body)`.
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .context("no header/body separator in response")?;
+    let head_text = std::str::from_utf8(&raw[..split]).context("non-UTF8 response head")?;
+    let status: u16 = head_text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .context("no status code in response")?;
+    let body = String::from_utf8_lossy(&raw[split + 4..]).into_owned();
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn one_shot_server(resp: Response) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let req = read_request(&mut stream).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/echo");
+            assert_eq!(req.body, b"{\"x\":1}");
+            write_response(&mut stream, &resp).unwrap();
+        });
+        addr
+    }
+
+    #[test]
+    fn round_trip_request_response() {
+        let addr = one_shot_server(
+            Response::json(200, "{\"ok\":true}".to_string()).with_header("X-Test", "yes"),
+        );
+        let (status, body) = request(&addr, "POST", "/echo?q=1", Some("{\"x\":1}")).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"ok\":true}");
+    }
+
+    #[test]
+    fn segments_split() {
+        let r = Request { method: "GET".into(), path: "/jobs/17".into(), body: vec![] };
+        assert_eq!(r.segments(), vec!["jobs", "17"]);
+        let r = Request { method: "GET".into(), path: "/".into(), body: vec![] };
+        assert!(r.segments().is_empty());
+    }
+
+    #[test]
+    fn malformed_head_is_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            read_request(&mut stream).is_err()
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"NOT A REQUEST\r\n\r\n").unwrap();
+        drop(c);
+        assert!(handle.join().unwrap());
+    }
+}

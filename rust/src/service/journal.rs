@@ -1,0 +1,210 @@
+//! Crash-safe job journal: an append-only JSONL file recording every job
+//! lifecycle transition (`submitted` → `started` → `done`/`failed`/
+//! `cancelled`).
+//!
+//! On daemon start the journal is replayed: any job whose last record is
+//! not terminal (the daemon crashed mid-queue or mid-run) is re-queued
+//! under its original id and spec. A torn final line — the signature of a
+//! crash mid-append — is skipped, never fatal. Appends are flushed and
+//! fsync'd per record; jobs are coarse-grained enough that durability is
+//! worth the syscall.
+
+use super::api::JobSpec;
+use super::queue::JobId;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// What a replay found.
+pub struct Replay {
+    /// Jobs with no terminal record, in submission order: re-queue these.
+    pub pending: Vec<(JobId, JobSpec)>,
+    /// One past the largest id ever journaled (the next fresh id).
+    pub next_id: JobId,
+}
+
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+impl Journal {
+    /// Open (creating if absent) the journal for appending.
+    pub fn open(path: &Path) -> Result<Journal> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        Ok(Journal { path: path.to_path_buf(), file: Mutex::new(file) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Replay an existing journal file (missing file = empty replay).
+    pub fn replay(path: &Path) -> Result<Replay> {
+        let mut pending: Vec<(JobId, JobSpec)> = Vec::new();
+        let mut next_id: JobId = 1;
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+            Err(e) => return Err(e).context("reading journal"),
+        };
+        for line in text.lines() {
+            // A torn trailing line (crash mid-append) is expected: skip
+            // anything unparseable instead of refusing to start.
+            let Ok(ev) = Json::parse(line) else { continue };
+            let Some(tag) = ev.get("ev").and_then(|t| t.as_str()) else { continue };
+            let Some(id) = ev.get("job").and_then(|j| j.as_f64()).map(|v| v as JobId) else {
+                continue;
+            };
+            next_id = next_id.max(id + 1);
+            match tag {
+                "submitted" => {
+                    let Some(spec_json) = ev.get("spec") else { continue };
+                    let Ok(spec) = JobSpec::from_json(spec_json) else { continue };
+                    pending.push((id, spec));
+                }
+                "done" | "failed" | "cancelled" => {
+                    pending.retain(|(p, _)| *p != id);
+                }
+                _ => {} // "started" keeps the job pending
+            }
+        }
+        Ok(Replay { pending, next_id })
+    }
+
+    pub fn submitted(&self, id: JobId, spec: &JobSpec) {
+        self.append(Json::obj(vec![
+            ("ev", Json::Str("submitted".into())),
+            ("job", Json::Num(id as f64)),
+            ("ts", Json::Num(unix_now())),
+            ("spec", spec.to_json()),
+        ]));
+    }
+
+    pub fn started(&self, id: JobId) {
+        self.event("started", id, None);
+    }
+
+    pub fn done(&self, id: JobId) {
+        self.event("done", id, None);
+    }
+
+    pub fn failed(&self, id: JobId, error: &str) {
+        self.event("failed", id, Some(("error", Json::Str(error.to_string()))));
+    }
+
+    pub fn cancelled(&self, id: JobId) {
+        self.event("cancelled", id, None);
+    }
+
+    fn event(&self, tag: &str, id: JobId, extra: Option<(&str, Json)>) {
+        let mut pairs = vec![
+            ("ev", Json::Str(tag.to_string())),
+            ("job", Json::Num(id as f64)),
+            ("ts", Json::Num(unix_now())),
+        ];
+        if let Some(p) = extra {
+            pairs.push(p);
+        }
+        self.append(Json::obj(pairs));
+    }
+
+    fn append(&self, ev: Json) {
+        let mut line = ev.dump();
+        line.push('\n');
+        let mut f = self.file.lock().unwrap();
+        // A journal write failing must not take down in-flight solves; the
+        // daemon keeps serving and the operator sees the warning.
+        if let Err(e) = f.write_all(line.as_bytes()).and_then(|()| f.sync_data()) {
+            eprintln!("warning: journal append failed: {e}");
+        }
+    }
+}
+
+fn unix_now() -> f64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn unique_journal() -> PathBuf {
+        static COUNTER: AtomicUsize = AtomicUsize::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("skr_journal_{}_{n}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn missing_file_replays_empty() {
+        let r = Journal::replay(Path::new("/nonexistent/skr/journal.jsonl")).unwrap();
+        assert!(r.pending.is_empty());
+        assert_eq!(r.next_id, 1);
+    }
+
+    #[test]
+    fn lifecycle_replay_requeues_only_nonterminal() {
+        let path = unique_journal();
+        let j = Journal::open(&path).unwrap();
+        let spec = JobSpec::default();
+        j.submitted(1, &spec); // done → not requeued
+        j.submitted(2, &spec); // started but never finished → requeued
+        j.submitted(3, &spec); // never started → requeued
+        j.submitted(4, &spec); // cancelled → not requeued
+        j.started(1);
+        j.done(1);
+        j.started(2);
+        j.cancelled(4);
+        drop(j);
+        let r = Journal::replay(&path).unwrap();
+        let ids: Vec<JobId> = r.pending.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![2, 3]);
+        assert_eq!(r.next_id, 5);
+        assert_eq!(r.pending[0].1, spec);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_trailing_line_is_skipped() {
+        let path = unique_journal();
+        let j = Journal::open(&path).unwrap();
+        j.submitted(1, &JobSpec::default());
+        drop(j);
+        // Simulate a crash mid-append: garbage partial record at the end.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"ev\":\"done\",\"jo").unwrap();
+        drop(f);
+        let r = Journal::replay(&path).unwrap();
+        assert_eq!(r.pending.len(), 1);
+        assert_eq!(r.pending[0].0, 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn failed_is_terminal() {
+        let path = unique_journal();
+        let j = Journal::open(&path).unwrap();
+        j.submitted(7, &JobSpec::default());
+        j.started(7);
+        j.failed(7, "solver exploded");
+        drop(j);
+        let r = Journal::replay(&path).unwrap();
+        assert!(r.pending.is_empty());
+        assert_eq!(r.next_id, 8);
+        let _ = std::fs::remove_file(&path);
+    }
+}

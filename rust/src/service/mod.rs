@@ -1,0 +1,239 @@
+//! `skr serve` — a resident data-generation daemon.
+//!
+//! The batch CLI solves one dataset per process; this subsystem turns the
+//! same [`Pipeline`](crate::coordinator::Pipeline) into an always-on service:
+//! jobs arrive over a minimal HTTP/1.1 JSON API ([`api`]), wait in a bounded
+//! FIFO ([`queue`], 429 + `Retry-After` on overflow), execute on a worker
+//! pool ([`worker`]) under cooperative cancellation, and every lifecycle
+//! transition lands in an append-only JSONL journal ([`journal`]) so a
+//! crashed daemon re-queues unfinished work on restart. Completed-job
+//! metrics aggregate into a live Prometheus `GET /metrics` endpoint via the
+//! existing [`RunMetrics::prometheus_text`]. Std-only, like the rest of the
+//! crate: the HTTP framing ([`http`]) is ~150 lines over `TcpStream`.
+
+pub mod api;
+pub mod http;
+pub mod journal;
+pub mod queue;
+pub mod worker;
+
+pub use api::JobSpec;
+pub use queue::{CancelResult, JobId, JobQueue, JobState, JobView, SubmitRejected};
+
+use crate::coordinator::metrics::RunMetrics;
+use crate::util::args::Args;
+use anyhow::{Context, Result};
+use journal::Journal;
+use std::fmt::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Daemon configuration (`skr serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:7070` (port 0 = ephemeral).
+    pub bind: String,
+    /// Concurrent jobs (each job additionally uses its own `threads`).
+    pub workers: usize,
+    /// Pending-backlog capacity before `POST /jobs` answers 429.
+    pub queue_capacity: usize,
+    /// Directory holding `journal.jsonl`.
+    pub state_dir: PathBuf,
+}
+
+impl ServeConfig {
+    pub fn from_args(args: &Args) -> ServeConfig {
+        let host = args.str_or("host", "127.0.0.1");
+        let port: u16 = args.num_or("port", 7070u16);
+        ServeConfig {
+            bind: format!("{host}:{port}"),
+            workers: args.num_or("workers", 1usize).max(1),
+            queue_capacity: args.num_or("queue-cap", 64usize).max(1),
+            state_dir: PathBuf::from(args.str_or("state-dir", "results/service")),
+        }
+    }
+}
+
+/// Shared state behind every connection handler and worker thread.
+pub struct Service {
+    pub queue: JobQueue,
+    pub journal: Journal,
+    /// RunMetrics of all completed jobs, merged (drives `GET /metrics`).
+    aggregate: Mutex<RunMetrics>,
+    submitted: AtomicUsize,
+    done: AtomicUsize,
+    failed: AtomicUsize,
+    cancelled: AtomicUsize,
+    /// Set once the listener is bound; used to self-connect on drain so the
+    /// blocking `accept` wakes up.
+    local_addr: OnceLock<SocketAddr>,
+}
+
+impl Service {
+    /// Build the service: open the journal, replay it, and re-queue every
+    /// job that never reached a terminal state.
+    pub fn new(cfg: &ServeConfig) -> Result<(Arc<Service>, usize)> {
+        let journal_path = cfg.state_dir.join("journal.jsonl");
+        let replay = Journal::replay(&journal_path)?;
+        let journal = Journal::open(&journal_path)?;
+        let svc = Service {
+            queue: JobQueue::new(cfg.queue_capacity, replay.next_id),
+            journal,
+            aggregate: Mutex::new(RunMetrics::default()),
+            submitted: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            cancelled: AtomicUsize::new(0),
+            local_addr: OnceLock::new(),
+        };
+        let replayed = replay.pending.len();
+        for (id, spec) in replay.pending {
+            svc.queue.requeue(id, spec);
+        }
+        Ok((Arc::new(svc), replayed))
+    }
+
+    /// Journal + enqueue one job.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId, SubmitRejected> {
+        let id = self.queue.submit(spec)?;
+        // Journal *after* admission so the record carries the real id; the
+        // tiny accept-then-crash window loses only an unacknowledged job.
+        let view = self.queue.get(id).expect("job just submitted");
+        self.journal.submitted(id, &view.spec);
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(id)
+    }
+
+    /// Cancel a job; journals immediately when it never started.
+    pub fn cancel(&self, id: JobId) -> CancelResult {
+        let r = self.queue.cancel(id);
+        if r == CancelResult::CancelledQueued {
+            self.journal.cancelled(id);
+            self.note_outcome(JobState::Cancelled);
+        }
+        r
+    }
+
+    pub(crate) fn absorb_metrics(&self, m: &RunMetrics) {
+        self.aggregate.lock().unwrap().merge(m);
+    }
+
+    pub(crate) fn note_outcome(&self, state: JobState) {
+        match state {
+            JobState::Done => self.done.fetch_add(1, Ordering::Relaxed),
+            JobState::Failed => self.failed.fetch_add(1, Ordering::Relaxed),
+            JobState::Cancelled => self.cancelled.fetch_add(1, Ordering::Relaxed),
+            _ => 0,
+        };
+    }
+
+    /// The `GET /metrics` body: service-level series + the merged
+    /// [`RunMetrics`] Prometheus snapshot of all completed jobs.
+    pub fn metrics_text(&self) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, help: &str, v: f64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        counter(
+            "skr_service_jobs_submitted_total",
+            "jobs accepted by POST /jobs",
+            self.submitted.load(Ordering::Relaxed) as f64,
+        );
+        counter(
+            "skr_service_jobs_done_total",
+            "jobs completed successfully",
+            self.done.load(Ordering::Relaxed) as f64,
+        );
+        counter(
+            "skr_service_jobs_failed_total",
+            "jobs that errored",
+            self.failed.load(Ordering::Relaxed) as f64,
+        );
+        counter(
+            "skr_service_jobs_cancelled_total",
+            "jobs cancelled",
+            self.cancelled.load(Ordering::Relaxed) as f64,
+        );
+        let _ = writeln!(out, "# TYPE skr_service_queue_depth gauge");
+        let _ = writeln!(out, "skr_service_queue_depth {}", self.queue.queued_len());
+        let _ = writeln!(out, "# TYPE skr_service_jobs_running gauge");
+        let _ = writeln!(out, "skr_service_jobs_running {}", self.queue.running_len());
+        out.push_str(&self.aggregate.lock().unwrap().prometheus_text());
+        out
+    }
+
+    /// Start the graceful drain: refuse new jobs, let queued + running work
+    /// finish, wake the accept loop so `serve` can return.
+    pub fn begin_drain(&self) {
+        self.queue.begin_drain();
+        if let Some(addr) = self.local_addr.get() {
+            // Nudge the blocking accept() so the serve loop observes the
+            // drain flag; errors are harmless (the loop may already be gone).
+            let _ = TcpStream::connect_timeout(addr, Duration::from_secs(1));
+        }
+    }
+}
+
+/// Bind, spawn the worker pool, serve until drained. Blocks until the
+/// graceful shutdown completes; every accepted job has then reached a
+/// terminal state.
+pub fn serve(cfg: &ServeConfig) -> Result<()> {
+    let listener =
+        TcpListener::bind(&cfg.bind).with_context(|| format!("binding {}", cfg.bind))?;
+    let addr = listener.local_addr()?;
+    let (svc, replayed) = Service::new(cfg)?;
+    svc.local_addr.set(addr).expect("local_addr set once");
+    println!(
+        "skr serve listening on {addr} ({} worker{}, queue cap {}, journal {})",
+        cfg.workers,
+        if cfg.workers == 1 { "" } else { "s" },
+        cfg.queue_capacity,
+        svc.journal.path().display(),
+    );
+    if replayed > 0 {
+        println!("re-queued {replayed} unfinished job(s) from the journal");
+    }
+
+    let mut workers = Vec::with_capacity(cfg.workers);
+    for _ in 0..cfg.workers {
+        let svc = svc.clone();
+        workers.push(std::thread::spawn(move || worker::run(svc)));
+    }
+
+    for stream in listener.incoming() {
+        if svc.queue.is_draining() {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let svc = svc.clone();
+        std::thread::spawn(move || handle_connection(stream, &svc));
+    }
+
+    for w in workers {
+        let _ = w.join();
+    }
+    println!("skr serve drained; all accepted jobs reached a terminal state");
+    Ok(())
+}
+
+fn handle_connection(mut stream: TcpStream, svc: &Service) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let resp = match http::read_request(&mut stream) {
+        Ok(req) => api::handle(svc, &req),
+        Err(e) => http::Response::json(
+            400,
+            crate::util::json::Json::obj(vec![(
+                "error",
+                crate::util::json::Json::Str(format!("{e:#}")),
+            )])
+            .dump(),
+        ),
+    };
+    let _ = http::write_response(&mut stream, &resp);
+}

@@ -1,0 +1,356 @@
+//! Bounded job queue + registry for `skr serve`.
+//!
+//! One mutex-guarded table holds every job the daemon has ever seen this
+//! run; a FIFO of pending ids feeds the worker pool through a condvar.
+//! Capacity bounds only the *pending* backlog — running and finished jobs
+//! never count against it, and journal-replayed jobs are re-admitted above
+//! capacity (they were already accepted once; rejecting them on restart
+//! would drop acknowledged work).
+
+use super::api::JobSpec;
+use crate::coordinator::{ProgressSnapshot, RunControl};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+pub type JobId = u64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+struct Job {
+    spec: JobSpec,
+    state: JobState,
+    ctl: Arc<RunControl>,
+    error: Option<String>,
+    dataset: Option<String>,
+}
+
+/// Read-only snapshot of one job for the API layer.
+#[derive(Debug, Clone)]
+pub struct JobView {
+    pub id: JobId,
+    pub state: JobState,
+    pub spec: JobSpec,
+    pub progress: ProgressSnapshot,
+    pub error: Option<String>,
+    pub dataset: Option<String>,
+}
+
+/// Why a submit was turned away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitRejected {
+    /// Pending backlog is at capacity — retry later (HTTP 429).
+    Full,
+    /// The daemon is draining for shutdown (HTTP 503).
+    Draining,
+}
+
+/// Outcome of a cancel request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelResult {
+    NotFound,
+    AlreadyTerminal(JobState),
+    /// Was still queued: terminal immediately, never ran.
+    CancelledQueued,
+    /// In flight: token flipped, the worker will stop within one solve.
+    CancellingRunning,
+}
+
+/// A unit of work handed to a worker thread.
+pub struct Task {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub ctl: Arc<RunControl>,
+}
+
+struct Inner {
+    jobs: BTreeMap<JobId, Job>,
+    pending: VecDeque<JobId>,
+    next_id: JobId,
+    running: usize,
+    draining: bool,
+}
+
+pub struct JobQueue {
+    inner: Mutex<Inner>,
+    ready: Condvar,
+    capacity: usize,
+}
+
+impl JobQueue {
+    pub fn new(capacity: usize, first_id: JobId) -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(Inner {
+                jobs: BTreeMap::new(),
+                pending: VecDeque::new(),
+                next_id: first_id.max(1),
+                running: 0,
+                draining: false,
+            }),
+            ready: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Admit a new job if there is backlog room; returns its fresh id.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId, SubmitRejected> {
+        let mut g = self.inner.lock().unwrap();
+        if g.draining {
+            return Err(SubmitRejected::Draining);
+        }
+        if g.pending.len() >= self.capacity {
+            return Err(SubmitRejected::Full);
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        g.jobs.insert(
+            id,
+            Job {
+                spec,
+                state: JobState::Queued,
+                ctl: Arc::new(RunControl::new()),
+                error: None,
+                dataset: None,
+            },
+        );
+        g.pending.push_back(id);
+        drop(g);
+        self.ready.notify_one();
+        Ok(id)
+    }
+
+    /// Re-admit a journaled job on restart under its *original* id —
+    /// bypasses the capacity check (the work was already acknowledged).
+    pub fn requeue(&self, id: JobId, spec: JobSpec) {
+        let mut g = self.inner.lock().unwrap();
+        g.next_id = g.next_id.max(id + 1);
+        g.jobs.insert(
+            id,
+            Job {
+                spec,
+                state: JobState::Queued,
+                ctl: Arc::new(RunControl::new()),
+                error: None,
+                dataset: None,
+            },
+        );
+        g.pending.push_back(id);
+        drop(g);
+        self.ready.notify_one();
+    }
+
+    /// Block until a job is available (or the drain completes); cancelled
+    /// queue entries are skipped, not returned.
+    pub fn take_next(&self) -> Option<Task> {
+        let mut guard = self.inner.lock().unwrap();
+        loop {
+            {
+                let g = &mut *guard; // split field borrows (pending/jobs/running)
+                while let Some(id) = g.pending.pop_front() {
+                    let job = g.jobs.get_mut(&id).expect("pending id without job entry");
+                    if job.state != JobState::Queued {
+                        continue; // cancelled while queued
+                    }
+                    job.state = JobState::Running;
+                    let task = Task { id, spec: job.spec.clone(), ctl: job.ctl.clone() };
+                    g.running += 1;
+                    return Some(task);
+                }
+                if g.draining {
+                    return None;
+                }
+            }
+            guard = self.ready.wait(guard).unwrap();
+        }
+    }
+
+    /// Record a worker's terminal outcome for `id`.
+    pub fn finish(&self, id: JobId, state: JobState, error: Option<String>, dataset: Option<String>) {
+        debug_assert!(state.is_terminal());
+        let mut guard = self.inner.lock().unwrap();
+        let g = &mut *guard; // split field borrows (jobs vs running)
+        if let Some(job) = g.jobs.get_mut(&id) {
+            if job.state == JobState::Running {
+                g.running -= 1;
+            }
+            job.state = state;
+            job.error = error;
+            job.dataset = dataset;
+        }
+    }
+
+    pub fn cancel(&self, id: JobId) -> CancelResult {
+        let mut g = self.inner.lock().unwrap();
+        let Some(job) = g.jobs.get_mut(&id) else { return CancelResult::NotFound };
+        match job.state {
+            s if s.is_terminal() => CancelResult::AlreadyTerminal(s),
+            JobState::Queued => {
+                job.state = JobState::Cancelled;
+                // Leave the id in `pending`; take_next skips non-queued ids.
+                CancelResult::CancelledQueued
+            }
+            _ => {
+                job.ctl.cancel();
+                CancelResult::CancellingRunning
+            }
+        }
+    }
+
+    pub fn get(&self, id: JobId) -> Option<JobView> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.get(&id).map(|job| view(id, job))
+    }
+
+    pub fn list(&self) -> Vec<JobView> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.iter().map(|(&id, job)| view(id, job)).collect()
+    }
+
+    /// Stop admitting work and wake all workers so they drain the backlog
+    /// and exit.
+    pub fn begin_drain(&self) {
+        self.inner.lock().unwrap().draining = true;
+        self.ready.notify_all();
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.inner.lock().unwrap().draining
+    }
+
+    pub fn queued_len(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.jobs.values().filter(|j| j.state == JobState::Queued).count()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.inner.lock().unwrap().running
+    }
+}
+
+fn view(id: JobId, job: &Job) -> JobView {
+    JobView {
+        id,
+        state: job.state,
+        spec: job.spec.clone(),
+        progress: job.ctl.progress(),
+        error: job.error.clone(),
+        dataset: job.dataset.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec::default()
+    }
+
+    #[test]
+    fn bounded_submit_then_429_equivalent() {
+        let q = JobQueue::new(2, 1);
+        assert_eq!(q.submit(spec()), Ok(1));
+        assert_eq!(q.submit(spec()), Ok(2));
+        assert_eq!(q.submit(spec()), Err(SubmitRejected::Full));
+        // Accepted work is still there.
+        assert_eq!(q.queued_len(), 2);
+        // Draining a slot re-opens capacity.
+        let t = q.take_next().unwrap();
+        assert_eq!(t.id, 1);
+        assert_eq!(q.submit(spec()), Ok(3));
+    }
+
+    #[test]
+    fn fifo_order_and_states() {
+        let q = JobQueue::new(8, 1);
+        let a = q.submit(spec()).unwrap();
+        let b = q.submit(spec()).unwrap();
+        assert_eq!(q.take_next().unwrap().id, a);
+        assert_eq!(q.get(a).unwrap().state, JobState::Running);
+        q.finish(a, JobState::Done, None, Some("out".into()));
+        assert_eq!(q.get(a).unwrap().state, JobState::Done);
+        assert_eq!(q.get(a).unwrap().dataset.as_deref(), Some("out"));
+        assert_eq!(q.take_next().unwrap().id, b);
+        assert_eq!(q.running_len(), 1);
+    }
+
+    #[test]
+    fn cancel_queued_never_runs() {
+        let q = JobQueue::new(8, 1);
+        let a = q.submit(spec()).unwrap();
+        let b = q.submit(spec()).unwrap();
+        assert_eq!(q.cancel(a), CancelResult::CancelledQueued);
+        assert_eq!(q.get(a).unwrap().state, JobState::Cancelled);
+        // The cancelled job is skipped; b comes out first.
+        assert_eq!(q.take_next().unwrap().id, b);
+        // Cancelling again reports terminal.
+        assert_eq!(q.cancel(a), CancelResult::AlreadyTerminal(JobState::Cancelled));
+        assert_eq!(q.cancel(999), CancelResult::NotFound);
+    }
+
+    #[test]
+    fn cancel_running_flips_token() {
+        let q = JobQueue::new(8, 1);
+        let a = q.submit(spec()).unwrap();
+        let task = q.take_next().unwrap();
+        assert!(!task.ctl.is_cancelled());
+        assert_eq!(q.cancel(a), CancelResult::CancellingRunning);
+        assert!(task.ctl.is_cancelled());
+    }
+
+    #[test]
+    fn drain_wakes_and_exhausts() {
+        let q = std::sync::Arc::new(JobQueue::new(8, 1));
+        q.submit(spec()).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            let mut served = 0;
+            while let Some(t) = q2.take_next() {
+                q2.finish(t.id, JobState::Done, None, None);
+                served += 1;
+            }
+            served
+        });
+        // Give the worker a moment, then drain; it must serve 1 then exit.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.begin_drain();
+        assert_eq!(h.join().unwrap(), 1);
+        assert_eq!(q.submit(spec()), Err(SubmitRejected::Draining));
+    }
+
+    #[test]
+    fn requeue_bypasses_capacity_and_preserves_ids() {
+        let q = JobQueue::new(1, 10);
+        q.submit(spec()).unwrap(); // fills capacity (id 10)
+        q.requeue(3, spec());
+        q.requeue(7, spec());
+        assert_eq!(q.queued_len(), 3);
+        // Fresh submits continue above the replayed id space.
+        let t = q.take_next().unwrap();
+        assert_eq!(t.id, 10);
+        let fresh = q.submit(spec()).unwrap();
+        assert_eq!(fresh, 11);
+    }
+}

@@ -1,0 +1,47 @@
+//! The worker pool: each worker thread loops `take_next → run pipeline →
+//! record outcome` until the queue drains. Pipeline runs go through
+//! [`Pipeline::run_with`] with the job's [`RunControl`], so `DELETE
+//! /jobs/:id` stops a run within one system solve and `GET /jobs/:id`
+//! reports live progress; completed-job [`RunMetrics`] merge into the
+//! service aggregate behind `GET /metrics`.
+
+use super::queue::{JobState, Task};
+use super::Service;
+use crate::coordinator::{Cancelled, Pipeline};
+use std::sync::Arc;
+
+/// Run one worker until the queue reports drained.
+pub fn run(svc: Arc<Service>) {
+    while let Some(task) = svc.queue.take_next() {
+        execute(&svc, task);
+    }
+}
+
+fn execute(svc: &Service, task: Task) {
+    let id = task.id;
+    svc.journal.started(id);
+    // The spec was validated at submit time, but a journal-replayed spec
+    // could still be stale/bad — a config error is a job failure, not a
+    // daemon crash.
+    let result = task.spec.to_config().and_then(|cfg| Pipeline::new(cfg).run_with(&task.ctl));
+    match result {
+        Ok(res) => {
+            svc.absorb_metrics(&res.metrics);
+            let dataset = res.dataset.map(|d| d.dir.display().to_string());
+            svc.journal.done(id);
+            svc.queue.finish(id, JobState::Done, None, dataset);
+            svc.note_outcome(JobState::Done);
+        }
+        Err(e) if e.downcast_ref::<Cancelled>().is_some() => {
+            svc.journal.cancelled(id);
+            svc.queue.finish(id, JobState::Cancelled, None, None);
+            svc.note_outcome(JobState::Cancelled);
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            svc.journal.failed(id, &msg);
+            svc.queue.finish(id, JobState::Failed, Some(msg), None);
+            svc.note_outcome(JobState::Failed);
+        }
+    }
+}

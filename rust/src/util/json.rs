@@ -186,6 +186,20 @@ impl<'a> Parser<'a> {
         Ok(Json::Num(s.parse()?))
     }
 
+    /// Read exactly four hex digits (one `\uXXXX` code unit), bounds-checked
+    /// so a truncated escape is a parse error rather than a panic.
+    fn hex4(&mut self) -> Result<u32> {
+        let end = self.i.checked_add(4).filter(|&e| e <= self.b.len());
+        let Some(end) = end else { bail!("truncated \\u escape at byte {}", self.i) };
+        let digits = &self.b[self.i..end];
+        if !digits.iter().all(|b| b.is_ascii_hexdigit()) {
+            bail!("bad \\u escape at byte {}", self.i);
+        }
+        let code = u32::from_str_radix(std::str::from_utf8(digits)?, 16)?;
+        self.i = end;
+        Ok(code)
+    }
+
     fn string(&mut self) -> Result<String> {
         self.eat(b'"')?;
         let mut s = String::new();
@@ -205,10 +219,29 @@ impl<'a> Parser<'a> {
                         Some(b'\\') => s.push('\\'),
                         Some(b'/') => s.push('/'),
                         Some(b'u') => {
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])?;
-                            let code = u32::from_str_radix(hex, 16)?;
+                            self.i += 1;
+                            let hi = self.hex4()?;
+                            let code = if (0xD800..0xDC00).contains(&hi) {
+                                // High surrogate: must pair with `\uDC00..\uDFFF`.
+                                if self.b.get(self.i) == Some(&b'\\')
+                                    && self.b.get(self.i + 1) == Some(&b'u')
+                                {
+                                    self.i += 2;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        bail!("unpaired surrogate \\u{hi:04x} at byte {}", self.i);
+                                    }
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    bail!("unpaired surrogate \\u{hi:04x} at byte {}", self.i);
+                                }
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                bail!("unpaired low surrogate \\u{hi:04x} at byte {}", self.i);
+                            } else {
+                                hi
+                            };
                             s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
-                            self.i += 4;
+                            continue;
                         }
                         _ => bail!("bad escape at byte {}", self.i),
                     }
@@ -312,5 +345,42 @@ mod tests {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
+    }
+
+    #[test]
+    fn unicode_escapes_decode() {
+        assert_eq!(Json::parse("\"A\\u00e9\"").unwrap(), Json::Str("Aé".into()));
+        // Astral-plane characters arrive as UTF-16 surrogate pairs.
+        assert_eq!(Json::parse("\"\\ud83d\\ude00\"").unwrap(), Json::Str("😀".into()));
+        assert_eq!(Json::parse("\"x\\ud834\\udd1ey\"").unwrap(), Json::Str("x\u{1D11E}y".into()));
+        // Literal (non-escaped) multibyte characters still pass through.
+        assert_eq!(Json::parse("\"😀\"").unwrap(), Json::Str("😀".into()));
+    }
+
+    #[test]
+    fn truncated_unicode_escape_is_error_not_panic() {
+        // These used to slice out of bounds (untrusted request bodies hit this).
+        for bad in ["\"\\u", "\"\\u1", "\"\\u12", "\"\\u123", "\"\\u123\""] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        // In-bounds but non-hex digits.
+        assert!(Json::parse("\"\\uzzzz\"").is_err());
+        assert!(Json::parse("\"\\u12g4\"").is_err());
+    }
+
+    #[test]
+    fn unpaired_surrogates_are_errors() {
+        assert!(Json::parse("\"\\ud83d\"").is_err()); // lone high
+        assert!(Json::parse("\"\\ud83dxx\"").is_err()); // high + literal text
+        assert!(Json::parse("\"\\ud83d\\n\"").is_err()); // high + non-u escape
+        assert!(Json::parse("\"\\ud83d\\u0041\"").is_err()); // high + non-low escape
+        assert!(Json::parse("\"\\ude00\"").is_err()); // lone low
+        assert!(Json::parse("\"\\ud83d\\u12\"").is_err()); // high + truncated low
+    }
+
+    #[test]
+    fn surrogate_pair_roundtrips_through_dump() {
+        let j = Json::Str("mix 😀 and \u{1D11E}".into());
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
     }
 }

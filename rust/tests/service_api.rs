@@ -1,0 +1,340 @@
+//! End-to-end tests for the `skr serve` subsystem: a real daemon on an
+//! ephemeral port, driven through the HTTP/JSON API exactly as the CLI
+//! clients and curl would drive it.
+
+use skr::coordinator::{Pipeline, PipelineConfig};
+use skr::service::http::request;
+use skr::service::journal::Journal;
+use skr::service::{serve, JobSpec, ServeConfig};
+use skr::util::json::Json;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+fn unique_dir(tag: &str) -> PathBuf {
+    static COUNTER: AtomicUsize = AtomicUsize::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("skr_svc_{tag}_{}_{n}", std::process::id()))
+}
+
+/// A daemon on an ephemeral port, shut down (gracefully) on drop via
+/// `POST /shutdown`.
+struct TestServer {
+    addr: String,
+    handle: Option<JoinHandle<anyhow::Result<()>>>,
+    state_dir: PathBuf,
+    /// Remove `state_dir` on drop; tests that inspect the journal after
+    /// shutdown turn this off and clean up themselves.
+    cleanup_state: bool,
+}
+
+impl TestServer {
+    fn start(workers: usize, queue_capacity: usize, state_dir: PathBuf) -> TestServer {
+        // Reserve an ephemeral port, free it, and hand it to the daemon.
+        // (Tiny race window, but unique-per-process and fine for tests.)
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        let cfg = ServeConfig {
+            bind: addr.clone(),
+            workers,
+            queue_capacity,
+            state_dir: state_dir.clone(),
+        };
+        let handle = std::thread::spawn(move || serve(&cfg));
+        let server = TestServer { addr, handle: Some(handle), state_dir, cleanup_state: true };
+        server.wait_healthy();
+        server
+    }
+
+    fn wait_healthy(&self) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while Instant::now() < deadline {
+            if let Ok((200, _)) = request(&self.addr, "GET", "/healthz", None) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        panic!("daemon on {} never became healthy", self.addr);
+    }
+
+    fn submit(&self, spec: &JobSpec) -> (u16, Json) {
+        let (status, body) =
+            request(&self.addr, "POST", "/jobs", Some(&spec.to_json().dump())).unwrap();
+        (status, Json::parse(&body).unwrap())
+    }
+
+    fn job(&self, id: u64) -> Json {
+        let (status, body) =
+            request(&self.addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+        assert_eq!(status, 200, "GET /jobs/{id}: {body}");
+        Json::parse(&body).unwrap()
+    }
+
+    fn wait_terminal(&self, id: u64, timeout: Duration) -> String {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let j = self.job(id);
+            let state = j.get("state").and_then(|s| s.as_str()).unwrap().to_string();
+            if ["done", "failed", "cancelled"].contains(&state.as_str()) {
+                return state;
+            }
+            assert!(Instant::now() < deadline, "job {id} stuck in {state}");
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    fn shutdown(mut self) {
+        self.drain_and_join();
+    }
+
+    fn drain_and_join(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            let _ = request(&self.addr, "POST", "/shutdown", None);
+            let result = handle.join();
+            // Asserting while a test is already unwinding would double-panic.
+            if !std::thread::panicking() {
+                result.unwrap().unwrap();
+            }
+        }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.drain_and_join();
+        if self.cleanup_state {
+            let _ = std::fs::remove_dir_all(&self.state_dir);
+        }
+    }
+}
+
+fn small_spec(seed: u64, out: Option<&std::path::Path>) -> JobSpec {
+    JobSpec {
+        family: "darcy".into(),
+        unknowns: 100,
+        count: 8,
+        engine: "skr".into(),
+        precond: "jacobi".into(),
+        sort: "greedy".into(),
+        threads: 2,
+        seed,
+        out: out.map(|p| p.display().to_string()),
+        ..JobSpec::default()
+    }
+}
+
+#[test]
+fn concurrent_jobs_match_direct_generate_byte_for_byte() {
+    let state = unique_dir("e2e_state");
+    let server = TestServer::start(2, 16, state);
+
+    // Submit N jobs with distinct seeds through the API.
+    let seeds = [3u64, 11, 29];
+    let mut ids = Vec::new();
+    let mut dirs = Vec::new();
+    for &seed in &seeds {
+        let dir = unique_dir(&format!("e2e_out_{seed}"));
+        let (status, resp) = server.submit(&small_spec(seed, Some(&dir)));
+        assert_eq!(status, 202, "{resp:?}");
+        ids.push(resp.get("id").and_then(|v| v.as_usize()).unwrap() as u64);
+        dirs.push(dir);
+    }
+    for &id in &ids {
+        assert_eq!(server.wait_terminal(id, Duration::from_secs(120)), "done");
+    }
+
+    // /metrics aggregates all completed jobs' RunMetrics.
+    let (status, metrics) = request(&server.addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(metrics.contains("skr_service_jobs_done_total 3"), "{metrics}");
+    assert!(
+        metrics.contains(&format!("skr_systems_total {}", seeds.len() * 8)),
+        "{metrics}"
+    );
+    assert!(metrics.contains("skr_solve_iters_bucket"), "{metrics}");
+
+    server.shutdown();
+
+    // Each API-produced dataset is byte-identical to a direct Pipeline run
+    // (i.e. what `skr generate` does) with the same spec.
+    for (&seed, dir) in seeds.iter().zip(&dirs) {
+        let reference = unique_dir(&format!("e2e_ref_{seed}"));
+        let mut cfg = small_spec(seed, Some(&reference)).to_config().unwrap();
+        cfg.out_dir = Some(reference.clone());
+        Pipeline::new(cfg).run().unwrap();
+        for file in ["inputs.npy", "solutions.npy"] {
+            let got = std::fs::read(dir.join(file)).unwrap();
+            let want = std::fs::read(reference.join(file)).unwrap();
+            assert_eq!(got, want, "{file} differs for seed {seed}");
+        }
+        let _ = std::fs::remove_dir_all(dir);
+        let _ = std::fs::remove_dir_all(&reference);
+    }
+}
+
+#[test]
+fn cancel_in_flight_stops_promptly_and_leaves_no_dataset() {
+    let state = unique_dir("cancel_state");
+    let server = TestServer::start(1, 8, state);
+
+    // A job big enough to still be running when the cancel lands.
+    let out = unique_dir("cancel_out");
+    let spec = JobSpec {
+        unknowns: 900,
+        count: 400,
+        tol: 1e-10,
+        ..small_spec(5, Some(&out))
+    };
+    let (status, resp) = server.submit(&spec);
+    assert_eq!(status, 202);
+    let id = resp.get("id").and_then(|v| v.as_usize()).unwrap() as u64;
+
+    // Wait until it is actually running and has made some progress.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let j = server.job(id);
+        let running = j.get("state").and_then(|s| s.as_str()) == Some("running");
+        let done =
+            j.get("progress").and_then(|p| p.get("done")).and_then(|v| v.as_usize()).unwrap_or(0);
+        if running && done > 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job never started: {j:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let (status, body) = request(&server.addr, "DELETE", &format!("/jobs/{id}"), None).unwrap();
+    assert_eq!(status, 202, "{body}");
+    assert_eq!(server.wait_terminal(id, Duration::from_secs(30)), "cancelled");
+    // Progress stopped well short of the full job.
+    let j = server.job(id);
+    let done =
+        j.get("progress").and_then(|p| p.get("done")).and_then(|v| v.as_usize()).unwrap();
+    assert!(done < 400, "cancel did not interrupt: {done}/400 systems ran");
+    // No partial dataset directory (atomic finalize never ran).
+    assert!(!out.exists(), "cancelled job left {}", out.display());
+
+    server.shutdown();
+}
+
+#[test]
+fn full_queue_answers_429_without_dropping_accepted_work() {
+    let state = unique_dir("full_state");
+    // One worker, capacity 2: first job occupies the worker, two fill the
+    // backlog, the fourth must bounce.
+    let server = TestServer::start(1, 2, state);
+
+    let blocker = JobSpec { unknowns: 900, count: 200, tol: 1e-10, ..small_spec(1, None) };
+    let (status, resp) = server.submit(&blocker);
+    assert_eq!(status, 202);
+    let blocker_id = resp.get("id").and_then(|v| v.as_usize()).unwrap() as u64;
+    // Wait for the worker to pick it up so it no longer occupies backlog.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while server.job(blocker_id).get("state").and_then(|s| s.as_str()) != Some("running") {
+        assert!(Instant::now() < deadline);
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let quick = |seed| JobSpec { count: 2, ..small_spec(seed, None) };
+    let (s1, r1) = server.submit(&quick(2));
+    let (s2, _r2) = server.submit(&quick(3));
+    assert_eq!((s1, s2), (202, 202));
+    let (s3, body) = request(
+        &server.addr,
+        "POST",
+        "/jobs",
+        Some(&quick(4).to_json().dump()),
+    )
+    .unwrap();
+    assert_eq!(s3, 429, "{body}");
+
+    // The accepted jobs are intact and eventually complete.
+    let id1 = r1.get("id").and_then(|v| v.as_usize()).unwrap() as u64;
+    let (_, cancel_body) =
+        request(&server.addr, "DELETE", &format!("/jobs/{blocker_id}"), None).unwrap();
+    assert!(cancel_body.contains("cancel"), "{cancel_body}");
+    assert_eq!(server.wait_terminal(id1, Duration::from_secs(120)), "done");
+
+    server.shutdown();
+}
+
+#[test]
+fn journal_replay_requeues_unfinished_jobs() {
+    let state = unique_dir("replay_state");
+    std::fs::create_dir_all(&state).unwrap();
+    let out = unique_dir("replay_out");
+
+    // Simulate a daemon killed mid-job: journal says submitted+started with
+    // no terminal record.
+    {
+        let journal = Journal::open(&state.join("journal.jsonl")).unwrap();
+        let spec = small_spec(17, Some(&out));
+        journal.submitted(1, &spec);
+        journal.started(1);
+        let done_spec = small_spec(99, None);
+        journal.submitted(2, &done_spec);
+        journal.started(2);
+        journal.done(2);
+    }
+
+    // Restart: job 1 must be re-queued and run to completion; job 2 must not.
+    let server = TestServer::start(1, 8, state.clone());
+    assert_eq!(server.wait_terminal(1, Duration::from_secs(120)), "done");
+    let (status, body) = request(&server.addr, "GET", "/jobs/2", None).unwrap();
+    assert_eq!(status, 404, "terminal journaled job must not reappear: {body}");
+    assert!(out.join("inputs.npy").exists());
+
+    // A fresh submit gets an id above everything the journal ever saw.
+    let (_, resp) = server.submit(&JobSpec { count: 1, ..small_spec(1, None) });
+    assert!(resp.get("id").and_then(|v| v.as_usize()).unwrap() >= 3, "{resp:?}");
+
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn graceful_shutdown_drains_queued_jobs() {
+    let state = unique_dir("drain_state");
+    let out = unique_dir("drain_out");
+    let mut server = TestServer::start(1, 8, state.clone());
+    server.cleanup_state = false; // the journal is inspected after shutdown
+    let (status, resp) = server.submit(&small_spec(7, Some(&out)));
+    assert_eq!(status, 202);
+    let id = resp.get("id").and_then(|v| v.as_usize()).unwrap() as u64;
+
+    // Shut down immediately: serve() must not return until the job finished.
+    server.shutdown();
+
+    let replay = Journal::replay(&state.join("journal.jsonl")).unwrap();
+    assert!(replay.pending.is_empty(), "drain left unfinished journaled jobs");
+    assert!(out.join("solutions.npy").exists(), "job {id} did not finish during drain");
+    let _ = std::fs::remove_dir_all(&out);
+    let _ = std::fs::remove_dir_all(&state);
+}
+
+#[test]
+fn api_rejects_malformed_and_unknown() {
+    let state = unique_dir("badreq_state");
+    let server = TestServer::start(1, 4, state);
+
+    let (status, _) = request(&server.addr, "POST", "/jobs", Some("{not json")).unwrap();
+    assert_eq!(status, 400);
+    // The truncated-\u payload that used to panic the JSON parser.
+    let (status, _) = request(&server.addr, "POST", "/jobs", Some("{\"family\":\"\\u12")).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) =
+        request(&server.addr, "POST", "/jobs", Some(r#"{"family":"nope"}"#)).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = request(&server.addr, "GET", "/jobs/999", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = request(&server.addr, "GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, body) = request(&server.addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("\"ok\":true"), "{body}");
+
+    server.shutdown();
+}
