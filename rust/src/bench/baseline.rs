@@ -1,0 +1,325 @@
+//! BENCH_*.json baselines and the regression gate.
+//!
+//! A baseline freezes the full benchmark outcome of one revision:
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "rev": "4844671",
+//!   "warmup": 1,
+//!   "runs": 3,
+//!   "results": [
+//!     {
+//!       "workload": { "name": "darcy-n400", "family": "darcy", ... },
+//!       "skr":   { "engine": "skr", "wall": {...}, "solve": {...},
+//!                  "counters": { "matvecs": ..., ... },
+//!                  "total_iters": ..., "stable": true, ... },
+//!       "gmres": { ... },
+//!       "time_speedup": 1.8, "iters_speedup": 2.1
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! The gate (`skr bench --check`) replays the baseline's own workloads and
+//! compares two tiers of evidence:
+//!
+//! * **deterministic counters** (matvecs, preconditioner applies,
+//!   orthogonalization flops, recycle installs, harvests, total
+//!   iterations) — compared **exactly**; any increase fails, on any
+//!   runner, because they are machine-independent;
+//! * **wall-clock medians** — compared within a tolerance
+//!   (`--max-regress 5%`), and skipped entirely under `--counters-only`
+//!   (the CI default, where runner noise drowns real signal).
+
+use crate::bench::manifest::Manifest;
+use crate::bench::runner::WorkloadResult;
+use crate::solver::SolveCounters;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Bump when the BENCH json layout changes incompatibly.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// A saved benchmark outcome for one revision.
+#[derive(Debug, Clone)]
+pub struct Baseline {
+    pub schema: u64,
+    /// Revision label the baseline was captured at (informational).
+    pub rev: String,
+    pub warmup: usize,
+    pub runs: usize,
+    pub results: Vec<WorkloadResult>,
+}
+
+impl Baseline {
+    pub fn new(rev: &str, m: &Manifest, results: Vec<WorkloadResult>) -> Baseline {
+        Baseline {
+            schema: SCHEMA_VERSION,
+            rev: rev.to_string(),
+            warmup: m.warmup,
+            runs: m.runs,
+            results,
+        }
+    }
+
+    /// Rebuild the manifest this baseline was produced from, so `--check`
+    /// re-runs exactly the recorded workloads (seeds included).
+    pub fn manifest(&self) -> Manifest {
+        Manifest {
+            warmup: self.warmup,
+            runs: self.runs,
+            workloads: self.results.iter().map(|r| r.workload.clone()).collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Num(self.schema as f64)),
+            ("rev", Json::Str(self.rev.clone())),
+            ("warmup", Json::Num(self.warmup as f64)),
+            ("runs", Json::Num(self.runs as f64)),
+            ("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Baseline> {
+        let schema = j.get("schema").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        if schema != SCHEMA_VERSION {
+            bail!("baseline schema {schema} unsupported (this build reads {SCHEMA_VERSION})");
+        }
+        let num = |k: &str, d: f64| j.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
+        let results = j
+            .get("results")
+            .and_then(|r| r.as_arr())
+            .context("baseline missing \"results\"")?
+            .iter()
+            .map(WorkloadResult::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Baseline {
+            schema,
+            rev: j.get("rev").and_then(|v| v.as_str()).unwrap_or("unknown").to_string(),
+            warmup: num("warmup", 1.0) as usize,
+            runs: (num("runs", 1.0) as usize).max(1),
+            results,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().dump())
+            .with_context(|| format!("writing baseline {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Baseline> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading baseline {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Baseline::from_json(&j).with_context(|| format!("loading {}", path.display()))
+    }
+}
+
+/// One gate violation, ready to print.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub workload: String,
+    pub engine: &'static str,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Regression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} [{}]: {}", self.workload, self.engine, self.detail)
+    }
+}
+
+/// Parse a time tolerance: `5%` or `0.05` both mean five percent.
+pub fn parse_max_regress(s: &str) -> Result<f64> {
+    let t = s.trim();
+    let v = if let Some(pct) = t.strip_suffix('%') {
+        pct.trim().parse::<f64>().map(|p| p / 100.0)
+    } else {
+        t.parse::<f64>()
+    };
+    match v {
+        Ok(f) if f >= 0.0 && f.is_finite() => Ok(f),
+        _ => bail!("invalid --max-regress {s:?} (expected e.g. \"5%\" or \"0.05\")"),
+    }
+}
+
+fn check_counters(
+    out: &mut Vec<Regression>,
+    name: &str,
+    eng: &'static str,
+    base: &SolveCounters,
+    cur: &SolveCounters,
+    base_iters: u64,
+    cur_iters: u64,
+) {
+    for (&(k, b), &(_, c)) in base.fields().iter().zip(cur.fields().iter()) {
+        if c > b {
+            out.push(Regression {
+                workload: name.to_string(),
+                engine: eng,
+                detail: format!("counter {k} regressed: {b} -> {c}"),
+            });
+        }
+    }
+    if cur_iters > base_iters {
+        out.push(Regression {
+            workload: name.to_string(),
+            engine: eng,
+            detail: format!("total_iters regressed: {base_iters} -> {cur_iters}"),
+        });
+    }
+    if base.recycle_installs() > 0 && cur.recycle_installs() == 0 {
+        out.push(Regression {
+            workload: name.to_string(),
+            engine: eng,
+            detail: "recycling went inactive (0 subspace installs)".to_string(),
+        });
+    }
+}
+
+/// Compare a fresh run against a baseline. Empty result = gate passes.
+///
+/// Counters gate exactly; solve-time medians gate within `max_regress`
+/// unless `counters_only` (harvests/reseeds/carries shrinking is fine —
+/// only *more work* fails).
+pub fn check(
+    base: &Baseline,
+    current: &[WorkloadResult],
+    max_regress: f64,
+    counters_only: bool,
+) -> Vec<Regression> {
+    let mut out = Vec::new();
+    for b in &base.results {
+        let name = &b.workload.name;
+        let Some(c) = current.iter().find(|c| c.workload.name == *name) else {
+            out.push(Regression {
+                workload: name.clone(),
+                engine: "-",
+                detail: "workload missing from current run".to_string(),
+            });
+            continue;
+        };
+        for (eng, br, cr) in [("skr", &b.skr, &c.skr), ("gmres", &b.gmres, &c.gmres)] {
+            if !cr.stable {
+                out.push(Regression {
+                    workload: name.clone(),
+                    engine: eng,
+                    detail: "counters varied across repeated runs (nondeterminism)".to_string(),
+                });
+            }
+            check_counters(
+                &mut out,
+                name,
+                eng,
+                &br.counters,
+                &cr.counters,
+                br.total_iters,
+                cr.total_iters,
+            );
+            if !counters_only && br.solve.median > 0.0 {
+                let limit = br.solve.median * (1.0 + max_regress);
+                if cr.solve.median > limit {
+                    out.push(Regression {
+                        workload: name.clone(),
+                        engine: eng,
+                        detail: format!(
+                            "solve median regressed {:.4}s -> {:.4}s (limit {:.4}s, +{:.0}%)",
+                            br.solve.median,
+                            cr.solve.median,
+                            limit,
+                            max_regress * 100.0
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::runner::run_workload;
+    use crate::pde::FamilyKind;
+
+    fn tiny_results() -> (Manifest, Vec<WorkloadResult>) {
+        let mut m = Manifest::quick();
+        m.workloads.truncate(1);
+        m.warmup = 0;
+        m.runs = 1;
+        let w = &mut m.workloads[0];
+        assert_eq!(w.family, FamilyKind::Darcy);
+        w.unknowns = 100;
+        w.count = 6;
+        let r = run_workload(&m.workloads[0], 0, 1).unwrap();
+        (m, vec![r])
+    }
+
+    #[test]
+    fn baseline_round_trips_and_rebuilds_manifest() {
+        let (m, results) = tiny_results();
+        let base = Baseline::new("testrev", &m, results);
+        let back = Baseline::from_json(&Json::parse(&base.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.rev, "testrev");
+        assert_eq!(back.results.len(), 1);
+        assert_eq!(back.results[0].skr.counters, base.results[0].skr.counters);
+        let m2 = back.manifest();
+        assert_eq!(m2.workloads.len(), 1);
+        assert_eq!(m2.workloads[0].name, m.workloads[0].name);
+        assert_eq!(m2.workloads[0].seed, m.workloads[0].seed);
+    }
+
+    #[test]
+    fn identical_rerun_passes_gate_and_inflation_fails_it() {
+        let (m, results) = tiny_results();
+        let base = Baseline::new("t", &m, results.clone());
+        assert!(check(&base, &results, 0.05, true).is_empty());
+
+        // Synthetic degradation: the solver suddenly does more work.
+        let mut worse = results.clone();
+        worse[0].skr.counters.matvecs += 50;
+        worse[0].skr.total_iters += 50;
+        let regs = check(&base, &worse, 0.05, true);
+        assert_eq!(regs.len(), 2, "{regs:?}");
+        assert!(regs.iter().any(|r| r.detail.contains("matvecs")));
+
+        // Recycling disabled shows up even if iterations happen to match.
+        let mut norec = results.clone();
+        norec[0].skr.counters.recycle_reseeds = 0;
+        norec[0].skr.counters.recycle_carries = 0;
+        let regs = check(&base, &norec, 0.05, true);
+        assert!(regs.iter().any(|r| r.detail.contains("recycling went inactive")), "{regs:?}");
+
+        // Missing workload is a failure, not a silent skip.
+        let regs = check(&base, &[], 0.05, true);
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].detail.contains("missing"));
+    }
+
+    #[test]
+    fn time_gate_respects_tolerance_and_counters_only() {
+        let (m, results) = tiny_results();
+        let base = Baseline::new("t", &m, results.clone());
+        let mut slow = results.clone();
+        slow[0].skr.solve.median = base.results[0].skr.solve.median * 2.0 + 1.0;
+        assert!(!check(&base, &slow, 0.05, false).is_empty());
+        assert!(check(&base, &slow, 0.05, true).is_empty());
+        let mut ok = results.clone();
+        ok[0].skr.solve.median = base.results[0].skr.solve.median * 1.01;
+        assert!(check(&base, &ok, 0.05, false).is_empty());
+    }
+
+    #[test]
+    fn max_regress_parses_percent_and_fraction() {
+        assert!((parse_max_regress("5%").unwrap() - 0.05).abs() < 1e-12);
+        assert!((parse_max_regress("0.05").unwrap() - 0.05).abs() < 1e-12);
+        assert!((parse_max_regress(" 12.5 % ").unwrap() - 0.125).abs() < 1e-12);
+        assert!(parse_max_regress("-1").is_err());
+        assert!(parse_max_regress("lots").is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! Named benchmark workloads with pinned seeds.
+//!
+//! A [`Workload`] fixes everything that determines a pipeline run — family,
+//! grid, count, preconditioner, sort, solver knobs, seed, threads — except
+//! the engine: the runner executes each workload under **both** engines so
+//! every result carries its recycled-vs-GMRES speedup ratio. The GMRES arm
+//! solves in stream order (`--sort none`), mirroring `skr compare`: the
+//! baseline the paper speeds up is unsorted restarted GMRES.
+
+use crate::coordinator::{PipelineConfig, SortStrategy};
+use crate::pde::FamilyKind;
+use crate::precond::PrecondKind;
+use crate::solver::Engine;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// One named benchmark configuration (engine-agnostic).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub family: FamilyKind,
+    pub unknowns: usize,
+    pub count: usize,
+    pub precond: PrecondKind,
+    pub sort: SortStrategy,
+    pub tol: f64,
+    pub m: usize,
+    pub k: usize,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Workload {
+    fn new(name: &str, family: FamilyKind, unknowns: usize, count: usize) -> Workload {
+        Workload {
+            name: name.to_string(),
+            family,
+            unknowns,
+            count,
+            precond: PrecondKind::Jacobi,
+            sort: SortStrategy::Greedy,
+            tol: 1e-8,
+            m: 30,
+            k: 10,
+            seed: 7,
+            threads: 1,
+        }
+    }
+
+    /// The pipeline configuration this workload runs under `engine`. The
+    /// GMRES baseline arm solves in stream order (no sort), matching
+    /// `skr compare`'s paper baseline; no dataset is exported.
+    pub fn pipeline_config(&self, engine: Engine) -> PipelineConfig {
+        let mut cfg = PipelineConfig::default();
+        cfg.family = self.family;
+        cfg.unknowns = self.unknowns;
+        cfg.count = self.count;
+        cfg.engine = engine;
+        cfg.precond = self.precond;
+        cfg.sort = if engine == Engine::Gmres { SortStrategy::None } else { self.sort };
+        cfg.threads = self.threads;
+        cfg.seed = self.seed;
+        cfg.out_dir = None;
+        cfg.solver.tol = self.tol;
+        cfg.solver.m = self.m;
+        cfg.solver.k = self.k;
+        cfg
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("family", Json::Str(self.family.label().to_lowercase())),
+            ("n", Json::Num(self.unknowns as f64)),
+            ("count", Json::Num(self.count as f64)),
+            ("precond", Json::Str(self.precond.label().to_lowercase())),
+            ("sort", Json::Str(self.sort.label().to_string())),
+            ("tol", Json::Num(self.tol)),
+            ("m", Json::Num(self.m as f64)),
+            ("k", Json::Num(self.k as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Workload> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .context("workload missing \"name\"")?
+            .to_string();
+        let str_or = |k: &str, d: &str| j.get(k).and_then(|v| v.as_str()).unwrap_or(d).to_string();
+        let num = |k: &str, d: f64| j.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
+        Ok(Workload {
+            family: FamilyKind::parse(&str_or("family", "darcy"))
+                .with_context(|| format!("workload {name}"))?,
+            unknowns: num("n", 900.0) as usize,
+            count: num("count", 24.0) as usize,
+            precond: PrecondKind::parse(&str_or("precond", "jacobi"))
+                .with_context(|| format!("workload {name}"))?,
+            sort: SortStrategy::parse(&str_or("sort", "greedy"))
+                .with_context(|| format!("workload {name}"))?,
+            tol: num("tol", 1e-8),
+            m: num("m", 30.0) as usize,
+            k: num("k", 10.0) as usize,
+            seed: num("seed", 7.0) as u64,
+            threads: (num("threads", 1.0) as usize).max(1),
+            name,
+        })
+    }
+}
+
+/// A set of workloads plus the repetition protocol.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Unmeasured runs per (workload, engine) to warm caches / page in.
+    pub warmup: usize,
+    /// Measured runs per (workload, engine); counters must not vary.
+    pub runs: usize,
+    pub workloads: Vec<Workload>,
+}
+
+impl Manifest {
+    /// The default suite: one workload per PDE family at CI-feasible sizes,
+    /// Darcy largest (the paper's headline family).
+    pub fn default_set() -> Manifest {
+        let mut helmholtz = Workload::new("helmholtz-n400", FamilyKind::Helmholtz, 400, 16);
+        helmholtz.precond = PrecondKind::Ilu;
+        Manifest {
+            warmup: 1,
+            runs: 3,
+            workloads: vec![
+                Workload::new("darcy-n2500", FamilyKind::Darcy, 2500, 16),
+                Workload::new("thermal-n900", FamilyKind::Thermal, 900, 24),
+                Workload::new("poisson-n900", FamilyKind::Poisson, 900, 24),
+                helmholtz,
+            ],
+        }
+    }
+
+    /// Small suite for CI gating: fast, still exercises recycling.
+    pub fn quick() -> Manifest {
+        Manifest {
+            warmup: 1,
+            runs: 3,
+            workloads: vec![
+                Workload::new("darcy-n400", FamilyKind::Darcy, 400, 12),
+                Workload::new("poisson-n400", FamilyKind::Poisson, 400, 12),
+            ],
+        }
+    }
+
+    /// Keep only workloads whose name contains `filter` (case-insensitive).
+    pub fn retain(&mut self, filter: &str) {
+        let f = filter.to_ascii_lowercase();
+        self.workloads.retain(|w| w.name.to_ascii_lowercase().contains(&f));
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("warmup", Json::Num(self.warmup as f64)),
+            ("runs", Json::Num(self.runs as f64)),
+            ("workloads", Json::Arr(self.workloads.iter().map(|w| w.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let num = |k: &str, d: f64| j.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
+        let workloads = j
+            .get("workloads")
+            .and_then(|w| w.as_arr())
+            .context("manifest missing \"workloads\"")?
+            .iter()
+            .map(Workload::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        if workloads.is_empty() {
+            bail!("manifest has no workloads");
+        }
+        Ok(Manifest {
+            warmup: num("warmup", 1.0) as usize,
+            runs: (num("runs", 3.0) as usize).max(1),
+            workloads,
+        })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Manifest::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_round_trips_through_json() {
+        for w in Manifest::default_set().workloads {
+            let j = Json::parse(&w.to_json().dump()).unwrap();
+            let back = Workload::from_json(&j).unwrap();
+            assert_eq!(back.name, w.name);
+            assert_eq!(back.family, w.family);
+            assert_eq!(back.unknowns, w.unknowns);
+            assert_eq!(back.count, w.count);
+            assert_eq!(back.precond, w.precond);
+            assert_eq!(back.sort, w.sort);
+            assert_eq!(back.tol, w.tol);
+            assert_eq!(back.m, w.m);
+            assert_eq!(back.k, w.k);
+            assert_eq!(back.seed, w.seed);
+            assert_eq!(back.threads, w.threads);
+        }
+    }
+
+    #[test]
+    fn manifest_round_trips_and_filters() {
+        let m = Manifest::default_set();
+        let j = Json::parse(&m.to_json().dump()).unwrap();
+        let back = Manifest::from_json(&j).unwrap();
+        assert_eq!(back.warmup, m.warmup);
+        assert_eq!(back.runs, m.runs);
+        assert_eq!(back.workloads.len(), m.workloads.len());
+
+        let mut filtered = back;
+        filtered.retain("DARCY");
+        assert_eq!(filtered.workloads.len(), 1);
+        assert_eq!(filtered.workloads[0].name, "darcy-n2500");
+    }
+
+    #[test]
+    fn gmres_arm_runs_unsorted() {
+        let w = &Manifest::quick().workloads[0];
+        let skr = w.pipeline_config(Engine::SkrRecycle);
+        let gm = w.pipeline_config(Engine::Gmres);
+        assert_eq!(skr.sort, SortStrategy::Greedy);
+        assert_eq!(gm.sort, SortStrategy::None);
+        assert_eq!(skr.seed, gm.seed);
+        assert_eq!(skr.solver.tol, gm.solver.tol);
+        assert!(skr.out_dir.is_none() && gm.out_dir.is_none());
+    }
+}

@@ -1,0 +1,145 @@
+//! `skr bench` — deterministic performance-regression benchmarking.
+//!
+//! The CI problem with benchmarking a solver is that wall-clock on shared
+//! runners is noise. This subsystem splits the evidence in two:
+//!
+//! * **Deterministic counters** — matvecs, preconditioner applies,
+//!   orthogonalization flops, recycle-subspace installs (carries +
+//!   reseeds), harvests, total iterations — plumbed out of
+//!   [`crate::solver::Workspace`] and summed across the run. The pipeline
+//!   shards systems deterministically and each shard solves sequentially,
+//!   so these counts are **bit-stable** across repeats and machines; CI
+//!   gates on them exactly.
+//! * **Wall-clock** — median/IQR over repeated runs, gated only within a
+//!   tolerance (`--max-regress`) and only where a human opts in.
+//!
+//! Modes:
+//!
+//! ```text
+//! skr bench [--quick] [--out BENCH_rev.json] [--rev label]
+//! skr bench --check benches/baseline.json [--max-regress 5%] [--counters-only]
+//! skr bench --compare BENCH_a.json BENCH_b.json
+//! ```
+//!
+//! Every workload runs under both engines, so each result (and each saved
+//! baseline) carries the recycled-vs-GMRES speedup ratio — the paper's
+//! headline number — alongside the raw counters.
+
+pub mod baseline;
+pub mod manifest;
+pub mod report;
+pub mod runner;
+pub mod stats;
+
+pub use baseline::{check, parse_max_regress, Baseline, Regression, SCHEMA_VERSION};
+pub use manifest::{Manifest, Workload};
+pub use runner::{run_engine, run_manifest, run_workload, EngineRun, WorkloadResult};
+pub use stats::{quantile, summarize, Summary};
+
+use crate::util::args::Args;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// CLI entry point for `skr bench`.
+pub fn run(args: &Args) -> Result<()> {
+    if let Some(a) = args.get("compare") {
+        let b = args
+            .positional()
+            .first()
+            .context("usage: skr bench --compare BENCH_a.json BENCH_b.json")?;
+        return compare(Path::new(a), Path::new(b));
+    }
+
+    let mut m = select_manifest(args)?;
+    if let Some(w) = args.get("warmup") {
+        m.warmup = w.parse().context("--warmup")?;
+    }
+    if let Some(r) = args.get("runs") {
+        m.runs = r.parse::<usize>().context("--runs")?.max(1);
+    }
+
+    let results = run_manifest(&m, |line| eprintln!("{line}"))?;
+    println!("{}", report::results_table(&results));
+
+    if let Some(path) = args.get("check") {
+        let base = Baseline::load(Path::new(path))?;
+        let max_regress = parse_max_regress(&args.str_or("max-regress", "5%"))?;
+        let counters_only = args.flag("counters-only");
+        let regs = check(&base, &results, max_regress, counters_only);
+        if regs.is_empty() {
+            println!(
+                "bench gate PASSED against {} ({} workloads, {})",
+                path,
+                base.results.len(),
+                if counters_only { "counters only" } else { "counters + time" }
+            );
+        } else {
+            for r in &regs {
+                eprintln!("REGRESSION {r}");
+            }
+            bail!("bench gate failed: {} regression(s) vs {}", regs.len(), path);
+        }
+    }
+
+    if let Some(out) = args.get("out") {
+        let rev = args.str_or("rev", "unknown");
+        let out = PathBuf::from(out);
+        if let Some(dir) = out.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        Baseline::new(&rev, &m, results).save(&out)?;
+        println!("baseline written to {} (rev {rev})", out.display());
+    }
+    Ok(())
+}
+
+/// Pick the workload set: `--check` replays the baseline's own manifest
+/// (pinned seeds included) so the comparison is exact; otherwise
+/// `--manifest FILE`, `--quick`, or the default suite, optionally filtered
+/// by `--workload SUBSTR`.
+fn select_manifest(args: &Args) -> Result<Manifest> {
+    let mut m = if let Some(path) = args.get("check") {
+        Baseline::load(Path::new(path))?.manifest()
+    } else if let Some(path) = args.get("manifest") {
+        Manifest::from_file(Path::new(path))?
+    } else if args.flag("quick") {
+        Manifest::quick()
+    } else {
+        Manifest::default_set()
+    };
+    if let Some(filter) = args.get("workload") {
+        m.retain(filter);
+        if m.workloads.is_empty() {
+            bail!("--workload {filter:?} matched no workloads");
+        }
+    }
+    Ok(m)
+}
+
+fn compare(a: &Path, b: &Path) -> Result<()> {
+    let ba = Baseline::load(a)?;
+    let bb = Baseline::load(b)?;
+    println!("{}", report::compare_table(&ba, &bb));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn manifest_selection_honours_flags() {
+        let m = select_manifest(&args("bench --quick")).unwrap();
+        assert_eq!(m.workloads.len(), 2);
+        let m = select_manifest(&args("bench --quick --workload poisson")).unwrap();
+        assert_eq!(m.workloads.len(), 1);
+        assert!(m.workloads[0].name.contains("poisson"));
+        assert!(select_manifest(&args("bench --quick --workload nosuch")).is_err());
+        let m = select_manifest(&args("bench")).unwrap();
+        assert!(m.workloads.len() >= 4);
+    }
+}

@@ -1,0 +1,147 @@
+//! Human-readable rendering of benchmark results and baseline diffs.
+
+use crate::bench::baseline::Baseline;
+use crate::bench::runner::WorkloadResult;
+use crate::util::table::Table;
+
+fn ms(seconds: f64) -> String {
+    format!("{:.1}", seconds * 1e3)
+}
+
+/// Table for a fresh `skr bench` run: per-workload medians, counters, and
+/// the recycled-vs-GMRES speedup ratios.
+pub fn results_table(results: &[WorkloadResult]) -> String {
+    let mut t = Table::new(
+        "skr bench",
+        &[
+            "workload",
+            "skr ms (med)",
+            "gmres ms (med)",
+            "skr iters",
+            "gmres iters",
+            "matvecs",
+            "speedup t/it",
+            "stable",
+        ],
+    );
+    for r in results {
+        t.row(vec![
+            r.workload.name.clone(),
+            ms(r.skr.solve.median),
+            ms(r.gmres.solve.median),
+            r.skr.total_iters.to_string(),
+            r.gmres.total_iters.to_string(),
+            r.skr.counters.matvecs.to_string(),
+            format!("{:.2}/{:.2}", r.time_speedup(), r.iters_speedup()),
+            if r.skr.stable && r.gmres.stable { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+fn delta_pct(old: f64, new: f64) -> String {
+    if old > 0.0 {
+        format!("{:+.1}%", (new / old - 1.0) * 100.0)
+    } else {
+        "n/a".to_string()
+    }
+}
+
+/// Table for `skr bench --compare a.json b.json`: per-workload deltas
+/// between two saved baselines (a = reference, b = candidate).
+pub fn compare_table(a: &Baseline, b: &Baseline) -> String {
+    let title = format!("bench compare: {} -> {}", a.rev, b.rev);
+    let mut t = Table::new(
+        &title,
+        &["workload", "skr ms a->b", "Δtime", "skr iters a->b", "Δmatvecs", "speedup a->b"],
+    );
+    for ra in &a.results {
+        let name = &ra.workload.name;
+        let Some(rb) = b.results.iter().find(|r| r.workload.name == *name) else {
+            t.row(vec![
+                name.clone(),
+                format!("{} -> gone", ms(ra.skr.solve.median)),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        };
+        t.row(vec![
+            name.clone(),
+            format!("{} -> {}", ms(ra.skr.solve.median), ms(rb.skr.solve.median)),
+            delta_pct(ra.skr.solve.median, rb.skr.solve.median),
+            format!("{} -> {}", ra.skr.total_iters, rb.skr.total_iters),
+            format!("{:+}", rb.skr.counters.matvecs as i64 - ra.skr.counters.matvecs as i64),
+            format!("{:.2} -> {:.2}", ra.time_speedup(), rb.time_speedup()),
+        ]);
+    }
+    for rb in &b.results {
+        if !a.results.iter().any(|r| r.workload.name == rb.workload.name) {
+            t.row(vec![
+                rb.workload.name.clone(),
+                format!("new -> {}", ms(rb.skr.solve.median)),
+                "-".into(),
+                format!("new -> {}", rb.skr.total_iters),
+                "-".into(),
+                format!("new -> {:.2}", rb.time_speedup()),
+            ]);
+        }
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::manifest::Manifest;
+    use crate::bench::runner::{EngineRun, WorkloadResult};
+    use crate::bench::stats::summarize;
+    use crate::solver::{Engine, SolveCounters};
+
+    fn fake_result(name: &str, skr_iters: u64, gmres_iters: u64) -> WorkloadResult {
+        let mut m = Manifest::quick();
+        let mut w = m.workloads.remove(0);
+        w.name = name.to_string();
+        let run = |engine, iters: u64, secs: f64| EngineRun {
+            engine,
+            wall: summarize(&[secs * 2.0]),
+            solve: summarize(&[secs]),
+            counters: SolveCounters { matvecs: iters + 2, ..Default::default() },
+            total_iters: iters,
+            breakdowns: 0,
+            max_iter_hits: 0,
+            stable: true,
+        };
+        WorkloadResult {
+            workload: w,
+            skr: run(Engine::SkrRecycle, skr_iters, 0.010),
+            gmres: run(Engine::Gmres, gmres_iters, 0.025),
+        }
+    }
+
+    #[test]
+    fn results_table_shows_speedup_and_stability() {
+        let out = results_table(&[fake_result("darcy-x", 100, 250)]);
+        assert!(out.contains("darcy-x"));
+        assert!(out.contains("2.50/2.50"), "{out}");
+        assert!(out.contains("yes"));
+    }
+
+    #[test]
+    fn compare_table_reports_deltas_and_membership() {
+        let m = Manifest::quick();
+        let olds = vec![fake_result("w1", 100, 200), fake_result("w2", 50, 100)];
+        let a = Baseline::new("aaa", &m, olds);
+        let mut newer = vec![fake_result("w1", 110, 200), fake_result("w3", 10, 30)];
+        newer[0].skr.counters.matvecs = 150;
+        let b = Baseline::new("bbb", &m, newer);
+        let out = compare_table(&a, &b);
+        assert!(out.contains("aaa -> bbb"));
+        assert!(out.contains("100 -> 110"), "{out}");
+        assert!(out.contains("+48"), "{out}");
+        assert!(out.contains("gone"), "{out}");
+        assert!(out.contains("new -> 10"), "{out}");
+    }
+}

@@ -1,0 +1,248 @@
+//! Executes workloads and collects timing + deterministic counters.
+//!
+//! Each workload runs under both engines: SKR (recycling, sorted stream)
+//! and the GMRES baseline (stream order). Per engine we do `warmup`
+//! unmeasured runs, then `runs` measured ones. Wall-clock is summarized
+//! with median/IQR; the deterministic counters must be **identical**
+//! across the measured runs — the pipeline shards systems
+//! deterministically and solves each shard sequentially, so any variation
+//! means nondeterminism crept in and the run is flagged unstable.
+
+use crate::bench::manifest::{Manifest, Workload};
+use crate::bench::stats::{summarize, Summary};
+use crate::coordinator::Pipeline;
+use crate::solver::{Engine, SolveCounters};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Measured behaviour of one workload under one engine.
+#[derive(Debug, Clone)]
+pub struct EngineRun {
+    pub engine: Engine,
+    /// End-to-end pipeline wall seconds per measured run.
+    pub wall: Summary,
+    /// Solve-stage seconds (sum over systems) per measured run.
+    pub solve: Summary,
+    /// Deterministic op counters from the first measured run.
+    pub counters: SolveCounters,
+    pub total_iters: u64,
+    pub breakdowns: u64,
+    pub max_iter_hits: u64,
+    /// True iff every measured run reproduced the same counters + iters.
+    pub stable: bool,
+}
+
+impl EngineRun {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("engine", Json::Str(self.engine.label().to_lowercase())),
+            ("wall", self.wall.to_json()),
+            ("solve", self.solve.to_json()),
+            ("counters", counters_to_json(&self.counters)),
+            ("total_iters", Json::Num(self.total_iters as f64)),
+            ("breakdowns", Json::Num(self.breakdowns as f64)),
+            ("max_iter_hits", Json::Num(self.max_iter_hits as f64)),
+            ("stable", Json::Bool(self.stable)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<EngineRun> {
+        let label = j.get("engine").and_then(|v| v.as_str()).unwrap_or("skr");
+        let num = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        Ok(EngineRun {
+            engine: Engine::parse(label)?,
+            wall: j.get("wall").map(Summary::from_json).unwrap_or_default(),
+            solve: j.get("solve").map(Summary::from_json).unwrap_or_default(),
+            counters: j.get("counters").map(counters_from_json).unwrap_or_default(),
+            total_iters: num("total_iters"),
+            breakdowns: num("breakdowns"),
+            max_iter_hits: num("max_iter_hits"),
+            stable: matches!(j.get("stable"), Some(Json::Bool(true))),
+        })
+    }
+}
+
+pub fn counters_to_json(c: &SolveCounters) -> Json {
+    Json::obj(c.fields().iter().map(|&(k, v)| (k, Json::Num(v as f64))).collect())
+}
+
+pub fn counters_from_json(j: &Json) -> SolveCounters {
+    let num = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    SolveCounters {
+        matvecs: num("matvecs"),
+        precond_applies: num("precond_applies"),
+        ortho_flops: num("ortho_flops"),
+        recycle_reseeds: num("recycle_reseeds"),
+        recycle_carries: num("recycle_carries"),
+        harvests: num("harvests"),
+    }
+}
+
+/// One workload measured under both engines.
+#[derive(Debug, Clone)]
+pub struct WorkloadResult {
+    pub workload: Workload,
+    pub skr: EngineRun,
+    pub gmres: EngineRun,
+}
+
+impl WorkloadResult {
+    /// GMRES-baseline solve time over SKR solve time (medians); > 1 means
+    /// recycling is faster. 0 when the SKR median is degenerate.
+    pub fn time_speedup(&self) -> f64 {
+        if self.skr.solve.median > 0.0 {
+            self.gmres.solve.median / self.skr.solve.median
+        } else {
+            0.0
+        }
+    }
+
+    /// GMRES total iterations over SKR total iterations — the
+    /// machine-independent version of the speedup.
+    pub fn iters_speedup(&self) -> f64 {
+        if self.skr.total_iters > 0 {
+            self.gmres.total_iters as f64 / self.skr.total_iters as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", self.workload.to_json()),
+            ("skr", self.skr.to_json()),
+            ("gmres", self.gmres.to_json()),
+            ("time_speedup", Json::Num(self.time_speedup())),
+            ("iters_speedup", Json::Num(self.iters_speedup())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkloadResult> {
+        Ok(WorkloadResult {
+            workload: Workload::from_json(j.get("workload").context("result missing workload")?)?,
+            skr: EngineRun::from_json(j.get("skr").context("result missing skr run")?)?,
+            gmres: EngineRun::from_json(j.get("gmres").context("result missing gmres run")?)?,
+        })
+    }
+}
+
+/// Run `w` under one engine: `warmup` unmeasured runs then `runs` measured.
+pub fn run_engine(w: &Workload, engine: Engine, warmup: usize, runs: usize) -> Result<EngineRun> {
+    let cfg = w.pipeline_config(engine);
+    for _ in 0..warmup {
+        Pipeline::new(cfg.clone())
+            .run()
+            .with_context(|| format!("warmup of {} under {}", w.name, engine.label()))?;
+    }
+    let mut wall = Vec::with_capacity(runs);
+    let mut solve = Vec::with_capacity(runs);
+    let mut first: Option<(SolveCounters, u64)> = None;
+    let mut stable = true;
+    let mut breakdowns = 0;
+    let mut max_iter_hits = 0;
+    for _ in 0..runs.max(1) {
+        let res = Pipeline::new(cfg.clone())
+            .run()
+            .with_context(|| format!("running {} under {}", w.name, engine.label()))?;
+        wall.push(res.metrics.wall_seconds);
+        solve.push(res.metrics.solve_seconds);
+        breakdowns = res.metrics.breakdowns as u64;
+        max_iter_hits = res.metrics.max_iter_hits as u64;
+        let now = (res.metrics.counters, res.metrics.total_iters as u64);
+        match &first {
+            None => first = Some(now),
+            Some(prev) => stable &= *prev == now,
+        }
+    }
+    let (counters, total_iters) = first.unwrap_or_default();
+    Ok(EngineRun {
+        engine,
+        wall: summarize(&wall),
+        solve: summarize(&solve),
+        counters,
+        total_iters,
+        breakdowns,
+        max_iter_hits,
+        stable,
+    })
+}
+
+/// Run one workload under both engines.
+pub fn run_workload(w: &Workload, warmup: usize, runs: usize) -> Result<WorkloadResult> {
+    Ok(WorkloadResult {
+        workload: w.clone(),
+        skr: run_engine(w, Engine::SkrRecycle, warmup, runs)?,
+        gmres: run_engine(w, Engine::Gmres, warmup, runs)?,
+    })
+}
+
+/// Run every workload in the manifest, reporting progress via `progress`.
+pub fn run_manifest(m: &Manifest, mut progress: impl FnMut(&str)) -> Result<Vec<WorkloadResult>> {
+    let mut out = Vec::with_capacity(m.workloads.len());
+    for (i, w) in m.workloads.iter().enumerate() {
+        progress(&format!(
+            "[{}/{}] {} (n={}, count={}, {} runs + {} warmup per engine)",
+            i + 1,
+            m.workloads.len(),
+            w.name,
+            w.unknowns,
+            w.count,
+            m.runs,
+            m.warmup
+        ));
+        let r = run_workload(w, m.warmup, m.runs)?;
+        if !r.skr.stable || !r.gmres.stable {
+            progress(&format!("warning: {} produced unstable counters", w.name));
+        }
+        out.push(r);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::FamilyKind;
+
+    fn tiny() -> Workload {
+        let mut m = Manifest::quick();
+        let mut w = m.workloads.remove(0);
+        assert_eq!(w.family, FamilyKind::Darcy);
+        w.unknowns = 100;
+        w.count = 6;
+        w
+    }
+
+    #[test]
+    fn engine_run_counters_are_stable_and_round_trip() {
+        let w = tiny();
+        let r = run_engine(&w, Engine::SkrRecycle, 0, 2).unwrap();
+        assert!(r.stable, "counters drifted across identical runs");
+        assert!(r.counters.matvecs > 0 && r.total_iters > 0);
+        assert!(r.counters.harvests > 0, "recycling never harvested: {:?}", r.counters);
+
+        let back = EngineRun::from_json(&Json::parse(&r.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.engine, r.engine);
+        assert_eq!(back.counters, r.counters);
+        assert_eq!(back.total_iters, r.total_iters);
+        assert_eq!(back.stable, r.stable);
+        assert_eq!(back.solve.median, r.solve.median);
+    }
+
+    #[test]
+    fn workload_result_reports_iteration_speedup() {
+        let w = tiny();
+        let r = run_workload(&w, 0, 1).unwrap();
+        assert!(r.gmres.counters.recycle_installs() == 0);
+        assert!(r.skr.counters.recycle_installs() > 0);
+        assert!(
+            r.iters_speedup() > 1.0,
+            "recycling should beat GMRES on iterations: {} vs {}",
+            r.skr.total_iters,
+            r.gmres.total_iters
+        );
+        let back = WorkloadResult::from_json(&Json::parse(&r.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.skr.counters, r.skr.counters);
+        assert_eq!(back.workload.name, r.workload.name);
+    }
+}

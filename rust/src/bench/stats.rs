@@ -1,0 +1,137 @@
+//! Robust summary statistics for repeated benchmark runs.
+//!
+//! Wall-clock samples from a CI runner are noisy and occasionally
+//! heavy-tailed (one run lands on a busy core), so the benchmark reports
+//! median and IQR rather than mean/stddev. Quantiles use linear
+//! interpolation between order statistics (numpy's default, R type 7).
+
+use crate::util::json::Json;
+
+/// Five-number-style summary of a sample set, plus the raw samples so a
+/// saved baseline can be re-analyzed later.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Summary {
+    pub median: f64,
+    pub q1: f64,
+    pub q3: f64,
+    pub min: f64,
+    pub max: f64,
+    /// The sorted samples the quantiles were computed from.
+    pub samples: Vec<f64>,
+}
+
+impl Summary {
+    /// Interquartile range — the noise band the time gate is calibrated to.
+    pub fn iqr(&self) -> f64 {
+        self.q3 - self.q1
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("median", Json::Num(self.median)),
+            ("q1", Json::Num(self.q1)),
+            ("q3", Json::Num(self.q3)),
+            ("min", Json::Num(self.min)),
+            ("max", Json::Num(self.max)),
+            ("samples", Json::Arr(self.samples.iter().map(|&s| Json::Num(s)).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Summary {
+        let num = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let samples = j
+            .get("samples")
+            .and_then(|s| s.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+            .unwrap_or_default();
+        Summary {
+            median: num("median"),
+            q1: num("q1"),
+            q3: num("q3"),
+            min: num("min"),
+            max: num("max"),
+            samples,
+        }
+    }
+}
+
+/// q-quantile of a **sorted** slice via linear interpolation between order
+/// statistics (R type 7 / numpy default). Empty input yields 0.
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Summarize a sample set (any order; NaNs sort last and are the caller's
+/// bug, not this function's).
+pub fn summarize(samples: &[f64]) -> Summary {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    Summary {
+        median: quantile(&s, 0.5),
+        q1: quantile(&s, 0.25),
+        q3: quantile(&s, 0.75),
+        min: s.first().copied().unwrap_or(0.0),
+        max: s.last().copied().unwrap_or(0.0),
+        samples: s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_and_iqr_on_known_samples() {
+        // Odd count: exact middle element.
+        let s = summarize(&[5.0, 1.0, 3.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        // q1/q3 interpolate: positions 0.5 and 1.5 over [1,3,5].
+        assert!((s.q1 - 2.0).abs() < 1e-12);
+        assert!((s.q3 - 4.0).abs() < 1e-12);
+        assert!((s.iqr() - 2.0).abs() < 1e-12);
+
+        // Even count: median interpolates between the middle pair.
+        let s = summarize(&[4.0, 1.0, 3.0, 2.0]);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        assert!((s.q1 - 1.75).abs() < 1e-12);
+        assert!((s.q3 - 3.25).abs() < 1e-12);
+
+        // Classic textbook set: 1..=9 has median 5, q1 3, q3 7.
+        let s = summarize(&[9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(s.median, 5.0);
+        assert_eq!(s.q1, 3.0);
+        assert_eq!(s.q3, 7.0);
+        assert_eq!(s.iqr(), 4.0);
+    }
+
+    #[test]
+    fn degenerate_sample_sets() {
+        let s = summarize(&[]);
+        assert_eq!(s.median, 0.0);
+        assert_eq!(s.iqr(), 0.0);
+        let s = summarize(&[2.5]);
+        assert_eq!(s.median, 2.5);
+        assert_eq!(s.q1, 2.5);
+        assert_eq!(s.q3, 2.5);
+        assert_eq!(s.min, 2.5);
+        assert_eq!(s.max, 2.5);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_summary() {
+        let s = summarize(&[0.25, 0.5, 0.125, 0.75]);
+        let j = s.to_json();
+        let back = Summary::from_json(&Json::parse(&j.dump()).unwrap());
+        assert_eq!(s, back);
+    }
+}

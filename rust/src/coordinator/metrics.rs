@@ -5,7 +5,7 @@
 //! iterations, solve seconds and the δ subspace distance.
 
 use crate::obs::Histogram;
-use crate::solver::{SolveStats, StopReason};
+use crate::solver::{SolveCounters, SolveStats, StopReason};
 
 /// Aggregate over a batch of per-system stats.
 #[derive(Debug, Clone)]
@@ -37,6 +37,10 @@ pub struct RunMetrics {
     pub symbolic_reuse: usize,
     /// Solves that reran on pooled Krylov buffers without reallocation.
     pub workspace_reuse: usize,
+    /// Deterministic solver op counters (matvecs, preconditioner applies,
+    /// orthogonalization flops, recycle events) summed over every solve —
+    /// the bit-stable metrics `skr bench` gates on.
+    pub counters: SolveCounters,
     /// Per-system inner-iteration histogram.
     pub iters_hist: Histogram,
     /// Per-system solve-seconds histogram.
@@ -63,6 +67,7 @@ impl Default for RunMetrics {
             sparsity_reuse: 0,
             symbolic_reuse: 0,
             workspace_reuse: 0,
+            counters: SolveCounters::default(),
             iters_hist: Histogram::iters_buckets(),
             time_hist: Histogram::seconds_buckets(),
             delta_hist: Histogram::unit_buckets(),
@@ -147,6 +152,7 @@ impl RunMetrics {
         self.sparsity_reuse += other.sparsity_reuse;
         self.symbolic_reuse += other.symbolic_reuse;
         self.workspace_reuse += other.workspace_reuse;
+        self.counters.merge(&other.counters);
         self.iters_hist.merge(&other.iters_hist);
         self.time_hist.merge(&other.time_hist);
         self.delta_hist.merge(&other.delta_hist);
@@ -193,6 +199,32 @@ impl RunMetrics {
             "skr_workspace_reuse_total",
             "solves rerun on pooled Krylov buffers",
             self.workspace_reuse as f64,
+        );
+        counter("skr_matvecs_total", "sparse operator applies", self.counters.matvecs as f64);
+        counter(
+            "skr_precond_applies_total",
+            "preconditioner applies",
+            self.counters.precond_applies as f64,
+        );
+        counter(
+            "skr_ortho_flops_total",
+            "orthogonalization flops",
+            self.counters.ortho_flops as f64,
+        );
+        counter(
+            "skr_recycle_reseeds_total",
+            "recycle spaces re-orthonormalized for a changed operator",
+            self.counters.recycle_reseeds as f64,
+        );
+        counter(
+            "skr_recycle_carries_total",
+            "recycle spaces carried on an operator fingerprint match",
+            self.counters.recycle_carries as f64,
+        );
+        counter(
+            "skr_harvests_total",
+            "harmonic-Ritz recycle-space harvests",
+            self.counters.harvests as f64,
         );
         let _ = writeln!(out, "# TYPE skr_wall_seconds gauge");
         let _ = writeln!(out, "skr_wall_seconds {}", self.wall_seconds);
@@ -287,6 +319,10 @@ mod tests {
         m.sparsity_reuse = 9;
         m.symbolic_reuse = 8;
         m.workspace_reuse = 7;
+        m.counters.matvecs = 44;
+        m.counters.precond_applies = 43;
+        m.counters.ortho_flops = 123456;
+        m.counters.recycle_carries = 2;
         m.record_delta(0.5);
         let text = m.prometheus_text();
         for series in [
@@ -296,6 +332,12 @@ mod tests {
             "skr_sparsity_reuse_total 9",
             "skr_symbolic_reuse_total 8",
             "skr_workspace_reuse_total 7",
+            "skr_matvecs_total 44",
+            "skr_precond_applies_total 43",
+            "skr_ortho_flops_total 123456",
+            "skr_recycle_reseeds_total 0",
+            "skr_recycle_carries_total 2",
+            "skr_harvests_total 0",
             "skr_solve_iters_bucket",
             "skr_solve_seconds_bucket",
             "skr_delta_bucket",

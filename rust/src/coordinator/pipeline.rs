@@ -34,7 +34,9 @@ use crate::la::Sparsity;
 use crate::obs::{NoopObserver, Progress, Recorder, RecordingObserver, SpanRecord, TraceSink};
 use crate::pde::ProblemFamily;
 use crate::precond::SymbolicPrecond;
-use crate::solver::{gcrodr_ws, gmres_ws, Engine, Recycler, SolveStats, StopReason, Workspace};
+use crate::solver::{
+    gcrodr_ws, gmres_ws, Engine, Recycler, SolveCounters, SolveStats, StopReason, Workspace,
+};
 use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::util::timer::Timer;
@@ -240,6 +242,7 @@ impl Pipeline {
             metrics.sparsity_reuse += out.sparsity_reuse;
             metrics.symbolic_reuse += out.symbolic_reuse;
             metrics.workspace_reuse += out.workspace_reuse;
+            metrics.counters.merge(&out.counters);
             workers.push(WorkerReport {
                 worker: out.worker,
                 systems: out.systems,
@@ -282,6 +285,12 @@ impl Pipeline {
                 ("sparsity_reuse", Json::Num(metrics.sparsity_reuse as f64)),
                 ("symbolic_reuse", Json::Num(metrics.symbolic_reuse as f64)),
                 ("workspace_reuse", Json::Num(metrics.workspace_reuse as f64)),
+                ("matvecs", Json::Num(metrics.counters.matvecs as f64)),
+                ("precond_applies", Json::Num(metrics.counters.precond_applies as f64)),
+                ("ortho_flops", Json::Num(metrics.counters.ortho_flops as f64)),
+                ("recycle_reseeds", Json::Num(metrics.counters.recycle_reseeds as f64)),
+                ("recycle_carries", Json::Num(metrics.counters.recycle_carries as f64)),
+                ("harvests", Json::Num(metrics.counters.harvests as f64)),
             ]));
             sink.flush();
         }
@@ -316,6 +325,7 @@ struct WorkerOutput {
     sparsity_reuse: usize,
     symbolic_reuse: usize,
     workspace_reuse: usize,
+    counters: SolveCounters,
 }
 
 /// Solve one contiguous batch sequentially, recycling across its systems.
@@ -467,6 +477,7 @@ fn solve_batch(
         sparsity_reuse,
         symbolic_reuse,
         workspace_reuse: ws.reuse_count(),
+        counters: *ws.counters(),
     })
 }
 
@@ -564,6 +575,25 @@ mod tests {
             skr.metrics.mean_iters(),
             gm.metrics.mean_iters()
         );
+    }
+
+    #[test]
+    fn counters_are_bit_stable_across_reruns() {
+        // The regression gate's contract: identical config + seed ⇒ identical
+        // counter tallies, even multithreaded (shards are deterministic and
+        // per-shard sequences are solved sequentially).
+        let run = |threads: usize| {
+            let mut cfg = small_cfg();
+            cfg.threads = threads;
+            Pipeline::new(cfg).run().unwrap().metrics.counters
+        };
+        let a = run(2);
+        let b = run(2);
+        assert_eq!(a, b);
+        assert!(a.matvecs > 0 && a.precond_applies > 0 && a.ortho_flops > 0);
+        assert!(a.harvests > 0, "{a:?}");
+        let c = run(1);
+        assert_eq!(c, run(1));
     }
 
     #[test]

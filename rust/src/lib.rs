@@ -42,6 +42,8 @@
 //!   workspace reuse counters surfaced by `skr report`.
 //! * [`service`] — the `skr serve` daemon: HTTP/JSON job queue over the
 //!   pipeline with cancellation, crash-safe journaling and live `/metrics`.
+//! * [`bench`] — `skr bench`: named workload manifests, median/IQR timing,
+//!   deterministic op counters and the BENCH_*.json regression gate CI runs.
 //! * [`harness`], [`no`], [`runtime`] — paper tables/figures, the FNO, PJRT.
 //!
 //! The public entry points a downstream user needs:
@@ -56,6 +58,7 @@
 // field-by-field (mirrors how the CLI layers flags onto defaults).
 #![allow(clippy::field_reassign_with_default)]
 
+pub mod bench;
 pub mod coordinator;
 pub mod harness;
 pub mod la;

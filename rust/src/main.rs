@@ -10,6 +10,7 @@
 //! * `parallel`  — reproduce Tables 31/32 (threaded/block variants)
 //! * `train`     — train the FNO on a generated dataset via the PJRT runtime
 //! * `validate`  — reproduce Table 33 (dataset-validity experiment)
+//! * `bench`     — deterministic perf benchmarks + BENCH_*.json regression gate
 //! * `report`    — aggregate a `--trace-out` JSONL trace into a summary
 //! * `serve`     — resident job-queue daemon with an HTTP/JSON API
 //! * `submit` / `jobs` / `status` / `cancel` — thin clients for `serve`
@@ -33,6 +34,7 @@ fn main() {
         "parallel" => harness::parallel::run(&args),
         "train" => harness::train::run(&args),
         "validate" => harness::validate::run(&args),
+        "bench" => skr::bench::run(&args),
         "report" => skr::obs::report::run(&args),
         "serve" => service::serve(&service::ServeConfig::from_args(&args)),
         "submit" => cmd_submit(&args),
@@ -98,6 +100,15 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
         m.systems,
         m.workspace_reuse,
         m.systems
+    );
+    println!(
+        "ops: matvecs {}  precond {}  ortho_flops {}  recycle carry/reseed/harvest {}/{}/{}",
+        m.counters.matvecs,
+        m.counters.precond_applies,
+        m.counters.ortho_flops,
+        m.counters.recycle_carries,
+        m.counters.recycle_reseeds,
+        m.counters.harvests
     );
     if m.max_iter_hits > 0 {
         println!("WARNING: {} systems hit the iteration cap", m.max_iter_hits);
@@ -240,6 +251,22 @@ COMMANDS
   report     aggregate a trace: skr report t.jsonl [--prometheus]
              (percentile solve times, iteration histogram, per-worker
              timeline/utilization, backpressure totals)
+
+BENCH (see README \"Benchmarking & regression gating\")
+  bench      run named workloads under both engines; median/IQR wall-clock
+             plus deterministic op counters (matvecs, precond applies,
+             ortho flops, recycle installs, harvests) that are bit-stable
+             across repeats and machines
+             --quick              small CI suite instead of the full one
+             --workload SUBSTR    filter workloads by name
+             --manifest FILE      custom workload manifest (json)
+             --warmup N --runs N  override the repetition protocol
+             --out BENCH_rev.json [--rev label]   save a baseline
+             --check FILE         replay FILE's workloads and fail on any
+                                  counter increase; time gated by
+                                  --max-regress 5% unless --counters-only
+             --compare A.json B.json   per-workload delta table
+             (each result carries the recycled-vs-GMRES speedup ratio)
 
 SERVICE (see README \"Running as a service\")
   serve      resident job-queue daemon with an HTTP/JSON API

@@ -7,6 +7,7 @@
 //! that emitted the trace.
 
 use crate::obs::hist::Histogram;
+use crate::solver::SolveCounters;
 use crate::util::args::Args;
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -63,6 +64,9 @@ pub struct TraceReport {
     pub sparsity_reuse: usize,
     pub symbolic_reuse: usize,
     pub workspace_reuse: usize,
+    /// Deterministic solver op counters from `run` events (all zero for
+    /// traces emitted before the counters existed).
+    pub counters: SolveCounters,
     pub parse_errors: usize,
 }
 
@@ -88,6 +92,7 @@ impl Default for TraceReport {
             sparsity_reuse: 0,
             symbolic_reuse: 0,
             workspace_reuse: 0,
+            counters: SolveCounters::default(),
             parse_errors: 0,
         }
     }
@@ -95,8 +100,14 @@ impl Default for TraceReport {
 
 impl TraceReport {
     pub fn from_file(path: &Path) -> Result<TraceReport> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading trace {}", path.display()))?;
+        // A writer killed mid-line can leave a torn final line — including
+        // a multibyte char cut in half, which `read_to_string` would reject
+        // outright. Decode lossily so the torn tail becomes one unparseable
+        // line (counted in `parse_errors`), mirroring the tolerance of
+        // `service::journal` replay.
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading trace {}", path.display()))?;
+        let text = String::from_utf8_lossy(&bytes);
         Self::from_lines(text.lines())
     }
 
@@ -174,6 +185,12 @@ impl TraceReport {
         self.sparsity_reuse += num("sparsity_reuse") as usize;
         self.symbolic_reuse += num("symbolic_reuse") as usize;
         self.workspace_reuse += num("workspace_reuse") as usize;
+        self.counters.matvecs += num("matvecs") as u64;
+        self.counters.precond_applies += num("precond_applies") as u64;
+        self.counters.ortho_flops += num("ortho_flops") as u64;
+        self.counters.recycle_reseeds += num("recycle_reseeds") as u64;
+        self.counters.recycle_carries += num("recycle_carries") as u64;
+        self.counters.harvests += num("harvests") as u64;
     }
 
     fn absorb_span(&mut self, ev: &Json) {
@@ -263,6 +280,19 @@ impl TraceReport {
                 self.workspace_reuse,
                 self.systems,
             );
+            let c = &self.counters;
+            if c != &SolveCounters::default() {
+                let _ = writeln!(
+                    out,
+                    "counters: matvecs {}  precond {}  ortho_flops {}  recycle carry/reseed/harvest {}/{}/{}",
+                    c.matvecs,
+                    c.precond_applies,
+                    c.ortho_flops,
+                    c.recycle_carries,
+                    c.recycle_reseeds,
+                    c.harvests,
+                );
+            }
         }
         if !self.stages.is_empty() {
             let stages: Vec<String> =
@@ -370,6 +400,48 @@ mod tests {
         assert!(text.contains("per-worker timeline"));
         assert!(text.contains("reuse: sparsity 1/3  symbolic 1/3  workspace 1/3"));
         assert_eq!(r.parse_errors, 0);
+    }
+
+    #[test]
+    fn run_event_counters_are_absorbed_and_rendered() {
+        let lines = [
+            r#"{"ev":"solve","id":0,"worker":0,"engine":"SKR","n":10,"iters":5,"seconds":0.01,"rel_residual":1e-10,"stop":"converged","recycle_k":0}"#,
+            r#"{"ev":"run","systems":1,"sparsity_reuse":0,"symbolic_reuse":0,"workspace_reuse":0,"matvecs":100,"precond_applies":90,"ortho_flops":12345,"recycle_reseeds":1,"recycle_carries":2,"harvests":3}"#,
+        ];
+        let r = TraceReport::from_lines(lines.iter().copied()).unwrap();
+        assert_eq!(r.counters.matvecs, 100);
+        assert_eq!(r.counters.precond_applies, 90);
+        assert_eq!(r.counters.ortho_flops, 12345);
+        assert_eq!(r.counters.recycle_reseeds, 1);
+        assert_eq!(r.counters.recycle_carries, 2);
+        assert_eq!(r.counters.harvests, 3);
+        let text = r.render();
+        assert!(
+            text.contains("counters: matvecs 100  precond 90  ortho_flops 12345"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn from_file_tolerates_torn_final_line() {
+        // A crashed writer can tear the last JSONL line anywhere — including
+        // mid-multibyte-char, which is invalid UTF-8. `skr report` must
+        // aggregate the intact prefix instead of erroring mid-parse.
+        use std::io::Write as _;
+        let path = std::env::temp_dir().join(format!("skr_torn_{}.jsonl", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        writeln!(
+            f,
+            r#"{{"ev":"solve","id":0,"worker":0,"engine":"SKR","n":10,"iters":5,"seconds":0.01,"rel_residual":1e-10,"stop":"converged","recycle_k":0}}"#
+        )
+        .unwrap();
+        // Torn tail: 0xC3 opens a 2-byte UTF-8 sequence that never completes.
+        f.write_all(b"{\"ev\":\"solve\",\"id\":1,\"engine\":\"GMR\xC3").unwrap();
+        drop(f);
+        let r = TraceReport::from_file(&path).unwrap();
+        assert_eq!(r.systems, 1);
+        assert_eq!(r.parse_errors, 1);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -16,7 +16,9 @@
 //! arrays stay local. Pooled buffers are fully (re)initialised before any
 //! read, so workspace reuse is bit-identical to fresh allocation.
 
-use super::workspace::{pool_push_copy, pool_push_div, Workspace};
+use super::workspace::{
+    cgs2_flops, pool_push_copy, pool_push_div, proj_flops, SolveCounters, Workspace,
+};
 use crate::la::{axpy, dot, norm2, Csr, Mat};
 use crate::obs::{NoopObserver, SolveObserver};
 use crate::precond::Preconditioner;
@@ -78,9 +80,18 @@ fn operator_fingerprint(a: &Csr, m_inv: &dyn Preconditioner) -> u64 {
 
 /// Apply the preconditioned operator: out = A M⁻¹ v (z is scratch).
 #[inline]
-fn apply_op(a: &Csr, m_inv: &dyn Preconditioner, v: &[f64], z: &mut [f64], out: &mut [f64]) {
+fn apply_op(
+    a: &Csr,
+    m_inv: &dyn Preconditioner,
+    v: &[f64],
+    z: &mut [f64],
+    out: &mut [f64],
+    ctr: &mut SolveCounters,
+) {
     m_inv.apply(v, z);
     a.matvec_into(z, out);
+    ctr.precond_applies += 1;
+    ctr.matvecs += 1;
 }
 
 /// Orthonormalize the image `A·M⁻¹·Y` into C (n×k) and update U so that
@@ -92,6 +103,7 @@ fn reseed(
     m_inv: &dyn Preconditioner,
     y: &[Vec<f64>],
     iters: &mut usize,
+    ctr: &mut SolveCounters,
 ) -> Option<(Vec<Vec<f64>>, Vec<Vec<f64>>)> {
     let n = a.nrows();
     let k = y.len();
@@ -102,7 +114,7 @@ fn reseed(
     let mut z = vec![0.0; n];
     let mut w = vec![0.0; n];
     for (j, yj) in y.iter().enumerate() {
-        apply_op(a, m_inv, yj, &mut z, &mut w);
+        apply_op(a, m_inv, yj, &mut z, &mut w, ctr);
         *iters += 1;
         ay.set_col(j, &w);
     }
@@ -117,7 +129,7 @@ fn reseed(
     // if truncation happened, for simplicity and robustness).
     if keep.len() < k {
         let ykeep: Vec<Vec<f64>> = keep.iter().map(|&i| y[i].clone()).collect();
-        return reseed(a, m_inv, &ykeep, iters);
+        return reseed(a, m_inv, &ykeep, iters, ctr);
     }
     // Solve U R = Y column-wise: U[:,j] = (Y[:,0..=j] combo). Use back-substitution
     // on Rᵀ? Direct: R is k×k upper triangular, U = Y R⁻¹.
@@ -201,11 +213,12 @@ pub fn gcrodr_ws(
     let mut iters = 0usize;
 
     ws.prepare(n, m);
-    let Workspace { w, z, r, du, basis, .. } = ws;
+    let Workspace { w, z, r, du, basis, ctr, .. } = ws;
 
     // r = b − A x
     r.copy_from_slice(b);
     a.matvec_into(x, w);
+    ctr.matvecs += 1;
     axpy(-1.0, w, r);
     let mut rel = norm2(r) / bnorm;
     obs.on_start(n, rel);
@@ -247,13 +260,15 @@ pub fn gcrodr_ws(
             axpy(-cj, &c[j], r);
         }
         m_inv.apply(du, z);
+        ctr.precond_applies += 1;
+        ctr.recycle_carries += 1;
         axpy(1.0, z, x);
         obs.on_recycle(k, true);
         uc = Some((u, c));
         rel = norm2(r) / bnorm;
         rec.ytilde = None;
     } else if let Some(y) = rec.ytilde.take() {
-        if let Some((u, c)) = reseed(a, m_inv, &y, &mut iters) {
+        if let Some((u, c)) = reseed(a, m_inv, &y, &mut iters, ctr) {
             // x ← x + M⁻¹ (U Cᵀ r);   r ← r − C Cᵀ r
             let k = c.len();
             du.fill(0.0);
@@ -263,6 +278,8 @@ pub fn gcrodr_ws(
                 axpy(-cj, &c[j], r);
             }
             m_inv.apply(du, z);
+            ctr.precond_applies += 1;
+            ctr.recycle_reseeds += 1;
             axpy(1.0, z, x);
             obs.on_recycle(k, false);
             uc = Some((u, c));
@@ -286,8 +303,9 @@ pub fn gcrodr_ws(
         let mut grot = vec![0.0; m + 1];
         grot[0] = beta;
         for j in 0..m {
-            apply_op(a, m_inv, &basis[j], z, w);
+            apply_op(a, m_inv, &basis[j], z, w, ctr);
             iters += 1;
+            ctr.ortho_flops += cgs2_flops(blen, n);
             let mut coeffs = crate::la::ortho::cgs2_orthogonalize(w, &basis[..blen]);
             let hnext = crate::la::ortho::normalize(w);
             coeffs.push(hnext);
@@ -334,6 +352,7 @@ pub fn gcrodr_ws(
                 axpy(*yl, &basis[l], du);
             }
             m_inv.apply(du, z);
+            ctr.precond_applies += 1;
             axpy(1.0, z, x);
             // r = V_{m+1} (βe₁ − H̄ y)
             let hy = h_bar.matvec(&y);
@@ -385,6 +404,7 @@ pub fn gcrodr_ws(
                             }
                         }
                     }
+                    ctr.harvests += 1;
                     obs.on_harvest(kk);
                     uc = Some((u_cols, c_cols));
                 }
@@ -396,6 +416,9 @@ pub fn gcrodr_ws(
     while rel >= cfg.tol && iters < cfg.max_iters {
         let Some((u, c)) = uc.as_ref() else {
             // No recycle space (degenerate first cycle): fall back to GMRES.
+            // The fallback runs on its own workspace, so its fine-grained op
+            // counts are not tallied into `ctr` — a deterministic (and rare)
+            // undercount, which is all the regression gate needs.
             let mut sub = cfg.clone();
             sub.max_iters = cfg.max_iters - iters;
             let stats = crate::solver::gmres::gmres(a, b, x, m_inv, &sub);
@@ -424,6 +447,7 @@ pub fn gcrodr_ws(
         {
             // v₁ = r/‖r‖, re-orthogonalized against C for numerical safety.
             pool_push_div(basis, &mut blen, r, rn);
+            ctr.ortho_flops += proj_flops(k, n);
             let v1 = &mut basis[0];
             for cj in c {
                 let h = dot(cj, v1);
@@ -444,14 +468,16 @@ pub fn gcrodr_ws(
         let mut grot = vec![0.0; s + 1];
         grot[0] = dot(&basis[0], r);
         for j in 0..s {
-            apply_op(a, m_inv, &basis[j], z, w);
+            apply_op(a, m_inv, &basis[j], z, w, ctr);
             iters += 1;
             // Project out C, recording B.
+            ctr.ortho_flops += proj_flops(k, n);
             for (i, ci) in c.iter().enumerate() {
                 let h = dot(ci, w);
                 bmat[(i, j)] = h;
                 axpy(-h, ci, w);
             }
+            ctr.ortho_flops += cgs2_flops(blen, n);
             let mut coeffs = crate::la::ortho::cgs2_orthogonalize(w, &basis[..blen]);
             let hnext = crate::la::ortho::normalize(w);
             coeffs.push(hnext);
@@ -523,6 +549,7 @@ pub fn gcrodr_ws(
             axpy(y[k + j], &basis[j], du);
         }
         m_inv.apply(du, z);
+        ctr.precond_applies += 1;
         axpy(1.0, z, x);
 
         // r ← r − Ŵ (Ḡ y).
@@ -592,6 +619,7 @@ pub fn gcrodr_ws(
                             }
                         }
                     }
+                    ctr.harvests += 1;
                     obs.on_harvest(kk);
                     uc = Some((u_new, c_new));
                 }
@@ -615,6 +643,7 @@ pub fn gcrodr_ws(
     // buffer is reused for the true residual.
     r.copy_from_slice(b);
     a.matvec_into(x, w);
+    ctr.matvecs += 1;
     axpy(-1.0, w, r);
     let final_rel = norm2(r) / bnorm;
     let stop = if final_rel < cfg.tol * 1.5 {
@@ -808,6 +837,46 @@ mod tests {
         let cfg = SolverConfig::default().with_tol(1e-14).with_max_iters(20).with_m(10).with_k(3);
         let s = gcrodr(&a, &b, &mut x, &Identity, &cfg, &mut rec);
         assert!(s.iters <= 25, "{}", s.iters);
+    }
+
+    #[test]
+    fn counters_track_recycle_events() {
+        // Same operator solved twice on one workspace: the first solve
+        // harvests (no install), the second installs via the cheap carry
+        // path; counters must be bit-stable across identical reruns.
+        let n = 200;
+        let a = lap1d(n);
+        let b: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.07).cos()).collect();
+        let cfg = SolverConfig::default().with_tol(1e-9).with_m(25).with_k(6);
+        let run = || {
+            let mut rec = Recycler::new();
+            let mut ws = Workspace::new();
+            for _ in 0..2 {
+                let mut x = vec![0.0; n];
+                let s =
+                    gcrodr_ws(&a, &b, &mut x, &Identity, &cfg, &mut rec, &mut NoopObserver, &mut ws);
+                assert!(s.converged(), "{s:?}");
+            }
+            *ws.counters()
+        };
+        let c1 = run();
+        let c2 = run();
+        assert_eq!(c1, c2, "counters must be bit-stable across identical reruns");
+        assert!(c1.harvests >= 1, "{c1:?}");
+        assert_eq!(c1.recycle_carries, 1, "{c1:?}");
+        assert_eq!(c1.recycle_reseeds, 0, "{c1:?}");
+        assert!(c1.matvecs > 0 && c1.precond_applies > 0 && c1.ortho_flops > 0);
+
+        // A perturbed operator on the third solve must take the reseed path.
+        let mut rec = Recycler::new();
+        let mut ws = Workspace::new();
+        let mut x = vec![0.0; n];
+        gcrodr_ws(&a, &b, &mut x, &Identity, &cfg, &mut rec, &mut NoopObserver, &mut ws);
+        let a2 = a.add_diag(0.01);
+        let mut x2 = vec![0.0; n];
+        gcrodr_ws(&a2, &b, &mut x2, &Identity, &cfg, &mut rec, &mut NoopObserver, &mut ws);
+        assert_eq!(ws.counters().recycle_reseeds, 1, "{:?}", ws.counters());
+        assert_eq!(ws.counters().recycle_carries, 0, "{:?}", ws.counters());
     }
 
     #[test]

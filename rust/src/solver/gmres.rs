@@ -11,7 +11,7 @@
 //! Pooled buffers are fully (re)initialised before any read, so workspace
 //! reuse is bit-identical to fresh allocation.
 
-use super::workspace::{pool_push_copy, pool_push_scaled, Workspace};
+use super::workspace::{cgs2_flops, pool_push_copy, pool_push_scaled, Workspace};
 use crate::la::{axpy, norm2, Csr};
 use crate::obs::{NoopObserver, SolveObserver};
 use crate::precond::Preconditioner;
@@ -65,11 +65,12 @@ pub fn gmres_ws(
     let mut total_iters = 0usize;
 
     ws.prepare(n, m);
-    let Workspace { basis, h, cs, sn, g, w, z, r, du, y, .. } = ws;
+    let Workspace { basis, h, cs, sn, g, w, z, r, du, y, ctr, .. } = ws;
 
     let mut rel = {
         r.copy_from_slice(b);
         a.matvec_into(x, w);
+        ctr.matvecs += 1;
         axpy(-1.0, w, r);
         norm2(r) / bnorm
     };
@@ -93,6 +94,7 @@ pub fn gmres_ws(
         // r = b - A x
         r.copy_from_slice(b);
         a.matvec_into(x, w);
+        ctr.matvecs += 1;
         axpy(-1.0, w, r);
         let beta = norm2(r);
         rel = beta / bnorm;
@@ -111,8 +113,11 @@ pub fn gmres_ws(
             // w = A M⁻¹ v_j
             m_inv.apply(&basis[j], z);
             a.matvec_into(z, w);
+            ctr.precond_applies += 1;
+            ctr.matvecs += 1;
             total_iters += 1;
             // Arnoldi (MGS + DGKS).
+            ctr.ortho_flops += cgs2_flops(blen, n);
             let coeffs = crate::la::ortho::cgs2_orthogonalize(w, &basis[..blen]);
             for (i, c) in coeffs.iter().enumerate() {
                 h[j * (m + 1) + i] = *c;
@@ -171,6 +176,7 @@ pub fn gmres_ws(
             axpy(*yl, &basis[l], du);
         }
         m_inv.apply(du, z);
+        ctr.precond_applies += 1;
         axpy(1.0, z, x);
 
         obs.on_cycle(total_iters, rel);
@@ -184,6 +190,7 @@ pub fn gmres_ws(
             // Recompute the true residual for honest reporting.
             r.copy_from_slice(b);
             a.matvec_into(x, w);
+            ctr.matvecs += 1;
             axpy(-1.0, w, r);
             let stats = SolveStats {
                 iters: total_iters,
@@ -202,6 +209,7 @@ pub fn gmres_ws(
     // Givens estimate).
     r.copy_from_slice(b);
     a.matvec_into(x, w);
+    ctr.matvecs += 1;
     axpy(-1.0, w, r);
     let final_rel = norm2(r) / bnorm;
     let stop = if final_rel.is_finite() && final_rel < cfg.tol * 1.5 {
@@ -360,6 +368,29 @@ mod tests {
         let stats = gmres(&a, &b, &mut x, &Identity, &cfg);
         assert!(stats.trace.len() >= 2);
         assert!(stats.trace.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn counters_are_deterministic_and_plausible() {
+        let a = lap1d(200);
+        let b = vec![1.0; 200];
+        let cfg = SolverConfig::default().with_tol(1e-10).with_m(20);
+        let run = || {
+            let mut ws = Workspace::new();
+            let mut x = vec![0.0; 200];
+            let s = gmres_ws(&a, &b, &mut x, &Identity, &cfg, &mut NoopObserver, &mut ws);
+            (s, *ws.counters())
+        };
+        let (s1, c1) = run();
+        let (_, c2) = run();
+        assert_eq!(c1, c2, "counters must be bit-stable across identical solves");
+        // One matvec + precond apply per Arnoldi step, plus the initial and
+        // final residual computations.
+        assert!(c1.matvecs as usize >= s1.iters + 2);
+        assert!(c1.precond_applies as usize >= s1.iters);
+        assert!(c1.ortho_flops > 0);
+        assert_eq!(c1.recycle_installs(), 0);
+        assert_eq!(c1.harvests, 0);
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod workspace;
 pub use gcrodr::{gcrodr, gcrodr_observed, gcrodr_ws, Recycler};
 pub use gmres::{gmres, gmres_observed, gmres_ws};
 pub use stats::{SolveStats, SolverConfig, StopReason};
-pub use workspace::Workspace;
+pub use workspace::{SolveCounters, Workspace};
 
 use crate::la::{Csr, Sparsity};
 use crate::obs::NoopObserver;
@@ -72,6 +72,8 @@ pub struct SequenceReuse {
     pub sparsity_reuse: usize,
     pub symbolic_reuse: usize,
     pub workspace_reuse: usize,
+    /// Deterministic op counters summed over every solve of the sequence.
+    pub counters: SolveCounters,
 }
 
 /// Solve a sequence of systems **in the given order** with one engine and a
@@ -136,6 +138,7 @@ pub fn solve_sequence_traced(
         out.push((x, stats));
     }
     reuse.workspace_reuse = ws.reuse_count();
+    reuse.counters = *ws.counters();
     Ok((out, reuse))
 }
 

@@ -9,6 +9,80 @@
 //! already fully (re)initialise every location they read, which is what keeps
 //! pooled and fresh-buffer runs bit-identical.
 
+/// Deterministic operation counters accumulated across the solves of a
+/// sequence — the bit-stable backbone of `skr bench` regression gating.
+///
+/// Unlike wall-clock timings these are pure *counts* of the work performed
+/// (operator applies, preconditioner applies, orthogonalization flops,
+/// recycle-space events), so two runs of the same workload with the same
+/// seeds produce identical values even on noisy CI runners. The solvers
+/// increment them inline; the costs of the small dense eigenproblems /
+/// QR factorizations (O(m³), independent of n) are deliberately excluded.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SolveCounters {
+    /// Sparse operator applies A·v (including residual recomputations).
+    pub matvecs: u64,
+    /// Preconditioner applies z = M⁻¹ r.
+    pub precond_applies: u64,
+    /// Flops spent keeping Krylov bases orthogonal: CGS2 Arnoldi
+    /// orthogonalization, projections against the recycle space C during
+    /// deflated Arnoldi, and basis normalizations (see [`cgs2_flops`] /
+    /// [`proj_flops`] for the exact accounting).
+    pub ortho_flops: u64,
+    /// Recycle spaces re-orthonormalized for a *changed* operator
+    /// (the k reseed operator applies were paid).
+    pub recycle_reseeds: u64,
+    /// Recycle spaces carried verbatim because the operator fingerprint
+    /// matched (the reseed applies were skipped — the cheap hit).
+    pub recycle_carries: u64,
+    /// Harmonic-Ritz harvests that installed a fresh recycle space.
+    pub harvests: u64,
+}
+
+impl SolveCounters {
+    /// Accumulate another tally (multi-worker reduction).
+    pub fn merge(&mut self, other: &SolveCounters) {
+        self.matvecs += other.matvecs;
+        self.precond_applies += other.precond_applies;
+        self.ortho_flops += other.ortho_flops;
+        self.recycle_reseeds += other.recycle_reseeds;
+        self.recycle_carries += other.recycle_carries;
+        self.harvests += other.harvests;
+    }
+
+    /// Recycle-subspace installs of either flavour.
+    pub fn recycle_installs(&self) -> u64 {
+        self.recycle_reseeds + self.recycle_carries
+    }
+
+    /// `(name, value)` view in a fixed order — drives the `BENCH_*.json`
+    /// counter block and the per-field regression check.
+    pub fn fields(&self) -> [(&'static str, u64); 6] {
+        [
+            ("matvecs", self.matvecs),
+            ("precond_applies", self.precond_applies),
+            ("ortho_flops", self.ortho_flops),
+            ("recycle_reseeds", self.recycle_reseeds),
+            ("recycle_carries", self.recycle_carries),
+            ("harvests", self.harvests),
+        ]
+    }
+}
+
+/// Flops charged for one CGS2 (two-pass classical Gram-Schmidt)
+/// orthogonalization of a length-`n` vector against `blen` basis vectors
+/// plus the trailing normalization: two passes of `blen` dots + `blen`
+/// axpys (2n flops each) and one norm + scale.
+pub(crate) fn cgs2_flops(blen: usize, n: usize) -> u64 {
+    (8 * blen * n + 3 * n) as u64
+}
+
+/// Flops charged for a one-pass projection against `cols` orthonormal
+/// columns (one dot + one axpy per column).
+pub(crate) fn proj_flops(cols: usize, n: usize) -> u64 {
+    (4 * cols * n) as u64
+}
+
 /// Pooled buffers shared by `gmres_ws` and `gcrodr_ws`.
 #[derive(Debug, Default)]
 pub struct Workspace {
@@ -35,6 +109,9 @@ pub struct Workspace {
     /// Krylov basis pool; logical length is tracked per solve, the vectors
     /// persist across solves.
     pub(crate) basis: Vec<Vec<f64>>,
+    /// Deterministic op counters, accumulated across every solve that runs on
+    /// this workspace; reset explicitly via [`Workspace::reset_counters`].
+    pub(crate) ctr: SolveCounters,
     prepared: bool,
     reuse_count: usize,
 }
@@ -72,6 +149,17 @@ impl Workspace {
     /// How many solves reused the buffers without reallocation.
     pub fn reuse_count(&self) -> usize {
         self.reuse_count
+    }
+
+    /// Deterministic operation counters accumulated so far.
+    pub fn counters(&self) -> &SolveCounters {
+        &self.ctr
+    }
+
+    /// Zero the counters (between benchmark repetitions) without touching the
+    /// pooled buffers.
+    pub fn reset_counters(&mut self) {
+        self.ctr = SolveCounters::default();
     }
 }
 
@@ -129,6 +217,50 @@ mod tests {
         assert_eq!(ws.reuse_count(), 2);
         assert_eq!(ws.w.len(), 12);
         assert_eq!(ws.h.len(), 7 * 6);
+    }
+
+    #[test]
+    fn counters_merge_and_enumerate() {
+        let mut a = SolveCounters {
+            matvecs: 3,
+            precond_applies: 2,
+            ortho_flops: 100,
+            recycle_reseeds: 1,
+            recycle_carries: 4,
+            harvests: 5,
+        };
+        let b = SolveCounters {
+            matvecs: 10,
+            precond_applies: 20,
+            ortho_flops: 1000,
+            recycle_reseeds: 2,
+            recycle_carries: 1,
+            harvests: 0,
+        };
+        a.merge(&b);
+        assert_eq!(a.matvecs, 13);
+        assert_eq!(a.ortho_flops, 1100);
+        assert_eq!(a.recycle_installs(), 8);
+        let names: Vec<&str> = a.fields().iter().map(|(n, _)| *n).collect();
+        assert_eq!(
+            names,
+            [
+                "matvecs",
+                "precond_applies",
+                "ortho_flops",
+                "recycle_reseeds",
+                "recycle_carries",
+                "harvests"
+            ]
+        );
+        assert_eq!(a.fields()[0].1, 13);
+    }
+
+    #[test]
+    fn flop_models_scale_with_basis_and_length() {
+        assert_eq!(cgs2_flops(0, 10), 30); // pure normalization
+        assert_eq!(cgs2_flops(5, 10), 8 * 5 * 10 + 30);
+        assert_eq!(proj_flops(3, 10), 120);
     }
 
     #[test]

@@ -1,0 +1,102 @@
+//! Integration tests for the `skr bench` subsystem: counter determinism
+//! across repeated runs (propcheck over random tiny workloads), baseline
+//! round-trip through disk, and the regression gate — including the
+//! degraded-solver scenario (recycling disabled must fail the gate).
+
+use skr::bench::{check, run_engine, run_manifest, run_workload, Baseline, Manifest};
+use skr::pde::FamilyKind;
+use skr::solver::Engine;
+use skr::util::propcheck::{check_msg, Config};
+
+/// One small Darcy workload, fast enough to solve repeatedly in a test.
+fn tiny_manifest() -> Manifest {
+    let mut m = Manifest::quick();
+    m.workloads.truncate(1);
+    m.warmup = 0;
+    m.runs = 2;
+    let w = &mut m.workloads[0];
+    assert_eq!(w.family, FamilyKind::Darcy);
+    w.unknowns = 100;
+    w.count = 6;
+    m
+}
+
+fn unique_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("skr_bench_gate_{}_{tag}.json", std::process::id()))
+}
+
+#[test]
+fn counter_blocks_identical_across_bench_runs() {
+    // The tentpole determinism contract, as a property over random tiny
+    // workloads: whatever the family/size/seed, re-running the same
+    // workload reproduces the counter block bit-for-bit.
+    let families = [FamilyKind::Darcy, FamilyKind::Poisson, FamilyKind::Thermal];
+    check_msg(
+        "bench counters are deterministic",
+        Config { cases: 5, seed: 0xBE7C4 },
+        |rng| {
+            let mut m = tiny_manifest();
+            let w = &mut m.workloads[0];
+            w.family = families[rng.below(families.len())];
+            w.unknowns = 64 + 16 * rng.below(4);
+            w.count = 3 + rng.below(3);
+            w.seed = rng.next_u64() % 1000;
+            w.name = format!("prop-{}-n{}-s{}", w.family.label(), w.unknowns, w.seed);
+            m.workloads[0].clone()
+        },
+        |w| {
+            let a = run_engine(w, Engine::SkrRecycle, 0, 1).map_err(|e| e.to_string())?;
+            let b = run_engine(w, Engine::SkrRecycle, 0, 1).map_err(|e| e.to_string())?;
+            if a.counters != b.counters || a.total_iters != b.total_iters {
+                return Err(format!("counter drift: {:?} vs {:?}", a.counters, b.counters));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn baseline_round_trips_through_disk_and_gate_passes_on_same_rev() {
+    let m = tiny_manifest();
+    let results = run_manifest(&m, |_| {}).unwrap();
+    assert!(results[0].skr.stable && results[0].gmres.stable);
+
+    // `--out` then `--check` on the same revision: zero counter drift.
+    let path = unique_path("roundtrip");
+    Baseline::new("samerev", &m, results).save(&path).unwrap();
+    let base = Baseline::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(base.rev, "samerev");
+    assert_eq!(base.runs, m.runs);
+
+    let replay = run_manifest(&base.manifest(), |_| {}).unwrap();
+    let regs = check(&base, &replay, 0.05, true);
+    assert!(regs.is_empty(), "same-rev replay must pass the gate: {regs:?}");
+}
+
+#[test]
+fn degraded_solver_fails_the_gate_and_healthy_one_beats_gmres() {
+    let m = tiny_manifest();
+    let w = &m.workloads[0];
+    let good = run_workload(w, 0, 1).unwrap();
+
+    // The paper's headline claim, on the Darcy workload: recycling does
+    // strictly less Krylov work than the GMRES baseline.
+    assert!(good.iters_speedup() > 1.0, "expected speedup > 1: {:?}", good.iters_speedup());
+    assert!(good.skr.counters.recycle_installs() > 0);
+    assert_eq!(good.gmres.counters.recycle_installs(), 0);
+
+    let base = Baseline::new("good", &m, vec![good.clone()]);
+
+    // Degraded solver: recycling silently disabled. Its measured behaviour
+    // is exactly the GMRES arm — more matvecs, zero subspace installs —
+    // and the gate must reject it.
+    let mut degraded = good.clone();
+    degraded.skr.counters = degraded.gmres.counters;
+    degraded.skr.total_iters = degraded.gmres.total_iters;
+    let regs = check(&base, &[degraded], 0.05, true);
+    assert!(!regs.is_empty(), "recycling-disabled run must fail the gate");
+    let all = regs.iter().map(|r| r.to_string()).collect::<Vec<_>>().join("\n");
+    assert!(all.contains("matvecs"), "{all}");
+    assert!(all.contains("recycling went inactive"), "{all}");
+}
