@@ -57,6 +57,9 @@ impl DatasetWriter {
                 self.sol_dim
             );
         }
+        // Last line of defense for distributed merges: the lease table
+        // already rejects duplicate shard results, but a row can only ever
+        // be written once regardless of who calls `put`.
         if self.filled[id] {
             bail!("sample id {id} written twice");
         }

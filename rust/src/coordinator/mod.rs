@@ -14,5 +14,5 @@ pub mod sorter;
 
 pub use config::PipelineConfig;
 pub use control::{Cancelled, ProgressSnapshot, RunControl};
-pub use pipeline::{Pipeline, PipelineResult, WorkerReport};
+pub use pipeline::{Pipeline, PipelineResult, RunPlan, WorkerReport};
 pub use sorter::SortStrategy;

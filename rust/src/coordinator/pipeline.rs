@@ -82,6 +82,24 @@ pub struct PipelineResult {
     pub workers: Vec<WorkerReport>,
 }
 
+/// The deterministic front half of a run (stages 1–3): parameter vectors,
+/// similarity-sorted solve order, and contiguous shards. Shared between
+/// [`Pipeline::run_with`] and `skr coordinate` — both derive the *same*
+/// plan from the same config, which is what makes a distributed run
+/// bit-identical to a single-node one.
+#[derive(Debug, Clone)]
+pub struct RunPlan {
+    /// Per-instance parameter vectors, indexed by original id.
+    pub params: Vec<Vec<f64>>,
+    /// Solve order over original ids (similarity-serialized).
+    pub order: Vec<usize>,
+    /// Contiguous slices of `order`, one per worker/shard.
+    pub shards: Vec<Vec<usize>>,
+    pub gen_seconds: f64,
+    pub sort_seconds: f64,
+    pub shard_seconds: f64,
+}
+
 /// The pipeline entry point.
 pub struct Pipeline {
     cfg: PipelineConfig,
@@ -115,6 +133,45 @@ impl Pipeline {
         self.run_with(&RunControl::new())
     }
 
+    /// Stages 1–3 (parameter pass → sort → shard) as a standalone plan over
+    /// `shards` contiguous batches. Pure function of the config and `shards`:
+    /// [`Pipeline::run_with`] computes exactly this with
+    /// `shards == cfg.threads`, and `skr coordinate` hands the same batches
+    /// to remote workers.
+    pub fn plan(&self, shards: usize) -> Result<RunPlan> {
+        self.plan_recorded(shards, &Recorder::new())
+    }
+
+    /// [`Pipeline::plan`], with the `gen`/`sort`/`shard` stage spans landed
+    /// on a caller-owned timeline (`skr coordinate` shares one recorder
+    /// between the plan and the per-shard merge spans).
+    pub fn plan_recorded(&self, shard_count: usize, recorder: &Recorder) -> Result<RunPlan> {
+        let cfg = &self.cfg;
+        let master = Rng::new(cfg.seed);
+
+        // 1. Parameter pass.
+        let gen_start = recorder.now();
+        let params: Vec<Vec<f64>> = (0..cfg.count)
+            .map(|i| self.family.sample_params(i, &mut master.split(i as u64)))
+            .collect::<Result<_>>()?;
+        let gen_seconds = recorder.now() - gen_start;
+        recorder.record("gen", None, gen_start, gen_seconds);
+
+        // 2. Sort.
+        let sort_start = recorder.now();
+        let order = sort_order(&params, cfg.sort, cfg.seed ^ 0x5EED);
+        let sort_seconds = recorder.now() - sort_start;
+        recorder.record("sort", None, sort_start, sort_seconds);
+
+        // 3. Shard.
+        let shard_start = recorder.now();
+        let shards = shard(&order, shard_count);
+        let shard_seconds = recorder.now() - shard_start;
+        recorder.record("shard", None, shard_start, shard_seconds);
+
+        Ok(RunPlan { params, order, shards, gen_seconds, sort_seconds, shard_seconds })
+    }
+
     /// Run the full pipeline under external supervision.
     ///
     /// `ctl` carries a cooperative cancellation token — checked between
@@ -145,24 +202,9 @@ impl Pipeline {
             ]));
         }
 
-        // 1. Parameter pass.
-        let gen_start = recorder.now();
-        let params: Vec<Vec<f64>> = (0..cfg.count)
-            .map(|i| self.family.sample_params(i, &mut master.split(i as u64)))
-            .collect::<Result<_>>()?;
-        let gen_seconds = recorder.now() - gen_start;
-        recorder.record("gen", None, gen_start, gen_seconds);
-
-        // 2. Sort.
-        let sort_start = recorder.now();
-        let order = sort_order(&params, cfg.sort, cfg.seed ^ 0x5EED);
-        let sort_seconds = recorder.now() - sort_start;
-        recorder.record("sort", None, sort_start, sort_seconds);
-
-        // 3. Shard.
-        let shard_start = recorder.now();
-        let shards = shard(&order, cfg.threads);
-        recorder.record("shard", None, shard_start, recorder.now() - shard_start);
+        // 1–3. Parameter pass → sort → shard (the shared deterministic plan).
+        let RunPlan { params, order, shards, gen_seconds, sort_seconds, .. } =
+            self.plan_recorded(cfg.threads, &recorder)?;
 
         // 4. Solve (+ stream to writer).
         let input_dim = params.first().map_or(0, |p| p.len());
@@ -538,6 +580,22 @@ mod tests {
         assert_eq!(r.metrics.sparsity_reuse, 10);
         assert_eq!(r.metrics.symbolic_reuse, 10);
         assert_eq!(r.metrics.workspace_reuse, 10);
+    }
+
+    #[test]
+    fn plan_matches_the_run_it_feeds() {
+        let p = Pipeline::new(small_cfg());
+        let plan = p.plan(2).unwrap();
+        assert_eq!(plan.params.len(), 12);
+        assert_eq!(plan.shards.len(), 2);
+        let flat: Vec<usize> = plan.shards.iter().flatten().copied().collect();
+        assert_eq!(flat, plan.order, "shards must be contiguous slices of the order");
+        let r = p.run().unwrap();
+        assert_eq!(r.order, plan.order, "run must solve the planned order");
+        // Planning is a pure function of (config, shard count).
+        let again = p.plan(2).unwrap();
+        assert_eq!(again.order, plan.order);
+        assert_eq!(again.params, plan.params);
     }
 
     #[test]

@@ -1,0 +1,529 @@
+//! `skr coordinate` — the lease-granting, result-merging side of a
+//! distributed run.
+//!
+//! The coordinator computes the *same* deterministic plan as a single-node
+//! `skr generate` ([`Pipeline::plan`]: parameter pass → similarity sort →
+//! contiguous shards), then serves the shards to workers over the
+//! `service::http` framing. Results stream back per shard; each is
+//! validated (planned ids, dimensions, FNV checksum) before it is merged
+//! id-indexed into the [`DatasetWriter`] — so the finished dataset is
+//! byte-identical to the single-node run with `--threads` equal to the
+//! shard count, and the summed [`SolveCounters`] match exactly.
+//!
+//! The accept loop is single-threaded and nonblocking: leases, heartbeats
+//! and merges all mutate one [`LeaseTable`] without locks, and expiry is
+//! swept on every request. After the last shard lands the coordinator
+//! finalizes the dataset, then lingers briefly answering `finished` so
+//! slow workers exit cleanly instead of erroring on a dead socket.
+
+use super::lease::{Disposition, Grant, LeaseConfig, LeaseTable};
+use super::protocol::{shard_checksum, ShardResultMsg, MAX_RESULT_BODY, PROTOCOL_VERSION};
+use crate::coordinator::dataset::{DatasetSummary, DatasetWriter};
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::Pipeline;
+use crate::obs::{Recorder, SpanRecord};
+use crate::service::http::{read_request_capped, write_response, Request, Response};
+use crate::service::JobSpec;
+use crate::solver::{SolveCounters, SolveStats};
+use crate::util::args::Args;
+use crate::util::json::Json;
+use crate::util::timer::Timer;
+use anyhow::{Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Configuration for one coordinated run.
+#[derive(Debug, Clone)]
+pub struct CoordinateConfig {
+    /// Listen address, e.g. `127.0.0.1:7171` (port 0 = ephemeral).
+    pub bind: String,
+    /// The generation job — same fields and defaults as `skr generate`.
+    pub spec: JobSpec,
+    /// Shard count; the distributed run is bit-identical to a single-node
+    /// `skr generate --threads <shards>`.
+    pub shards: usize,
+    pub lease: LeaseConfig,
+    /// How long to keep answering `finished` after the run completes.
+    pub linger_ms: u64,
+}
+
+impl CoordinateConfig {
+    pub fn from_args(args: &Args) -> CoordinateConfig {
+        let spec = JobSpec::from_args(args);
+        let shards = args.num_or("shards", spec.threads).max(1);
+        CoordinateConfig {
+            bind: format!(
+                "{}:{}",
+                args.str_or("host", "127.0.0.1"),
+                args.num_or("port", 7171u16)
+            ),
+            spec,
+            shards,
+            lease: LeaseConfig {
+                lease_ms: args.num_or("lease-ms", 30_000u64),
+                max_attempts: args.num_or("max-attempts", 3u32),
+                backoff_ms: args.num_or("backoff-ms", 500u64),
+            },
+            linger_ms: args.num_or("linger-ms", 1_000u64),
+        }
+    }
+}
+
+/// What a coordinated run produced.
+#[derive(Debug)]
+pub struct DistSummary {
+    pub systems: usize,
+    pub shards: usize,
+    pub granted: u64,
+    pub expired: u64,
+    pub retried: u64,
+    pub duplicates: u64,
+    pub degraded: bool,
+    /// Total accepted result-payload bytes.
+    pub bytes_merged: u64,
+    pub dataset: Option<DatasetSummary>,
+    /// Folded in shard order — identical to the single-node aggregation.
+    pub metrics: RunMetrics,
+    /// `gen`/`sort`/`shard` plan spans plus one `dist/shard{i}` span per
+    /// accepted shard (grant → merge).
+    pub spans: Vec<SpanRecord>,
+}
+
+/// Bind `cfg.bind` and run the coordinator to completion.
+pub fn coordinate(cfg: &CoordinateConfig) -> Result<DistSummary> {
+    let listener = TcpListener::bind(&cfg.bind)
+        .with_context(|| format!("binding coordinator to {}", cfg.bind))?;
+    coordinate_bound(cfg, listener)
+}
+
+/// [`coordinate`] on a caller-bound listener (tests bind an ephemeral port
+/// first so they know the address before the coordinator starts).
+pub fn coordinate_bound(cfg: &CoordinateConfig, listener: TcpListener) -> Result<DistSummary> {
+    let wall = Timer::start();
+    let mut spec = cfg.spec.clone();
+    if spec.out.is_none() {
+        spec.out = Some(format!(
+            "results/dist_{}_{}",
+            spec.family.to_lowercase(),
+            spec.count
+        ));
+    }
+    let pcfg = spec.to_config()?;
+    let pipe = Pipeline::new(pcfg);
+    let nshards = cfg.shards.max(1);
+    let recorder = Recorder::new();
+    let plan = pipe.plan_recorded(nshards, &recorder)?;
+    let count = pipe.config().count;
+    let input_dim = plan.params.first().map_or(0, |p| p.len());
+    let sol_dim = pipe.family().num_unknowns();
+    let out_dir = pipe.config().out_dir.clone().context("no output directory")?;
+
+    let plan_body = Json::obj(vec![
+        ("version", Json::Num(PROTOCOL_VERSION as f64)),
+        ("spec", spec.to_json()),
+        ("count", Json::Num(count as f64)),
+        (
+            "shards",
+            Json::Arr(
+                plan.shards
+                    .iter()
+                    .map(|ids| Json::Arr(ids.iter().map(|&i| Json::Num(i as f64)).collect()))
+                    .collect(),
+            ),
+        ),
+    ])
+    .dump();
+
+    let mut coord = Coord {
+        lease_cfg: cfg.lease,
+        table: LeaseTable::new(plan.shards.clone(), cfg.lease),
+        writer: Some(DatasetWriter::new(
+            &out_dir,
+            count,
+            input_dim,
+            sol_dim,
+            pipe.family().field_side(),
+        )),
+        done: (0..nshards).map(|_| None).collect(),
+        grant_started: vec![0.0; nshards],
+        recorder,
+        gen_seconds: plan.gen_seconds,
+        sort_seconds: plan.sort_seconds,
+        bytes_merged: 0,
+        plan_body,
+        input_dim,
+        sol_dim,
+    };
+
+    listener.set_nonblocking(true).context("nonblocking accept")?;
+    let local = listener.local_addr()?;
+    println!("coordinator listening on {local} ({count} systems in {nshards} shards)");
+
+    let epoch = Instant::now();
+    let mut finished_at: Option<u64> = None;
+    let mut dataset: Option<DatasetSummary> = None;
+    let mut metrics = RunMetrics::default();
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                if let Err(e) = serve_one(&mut coord, &mut stream, &epoch) {
+                    eprintln!("dist: connection error: {e:#}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e).context("accepting worker connection"),
+        }
+        if !coord.table.all_done() {
+            continue;
+        }
+        let now_ms = epoch.elapsed().as_millis() as u64;
+        if coord.writer.is_some() {
+            // All shards merged: finalize exactly as `skr generate` does
+            // (same meta extras, same staged atomic rename).
+            let writer = coord.writer.take().unwrap();
+            metrics = coord.fold_metrics();
+            metrics.wall_seconds = wall.secs();
+            let ds = writer
+                .finalize(
+                    pipe.family().name(),
+                    vec![
+                        ("engine", Json::Str(pipe.config().engine.label().into())),
+                        ("tol", Json::Num(pipe.config().solver.tol)),
+                        ("seed", Json::Num(pipe.config().seed as f64)),
+                    ],
+                )
+                .context("finalizing dataset")?;
+            let t = &coord.table;
+            println!(
+                "dist: {} systems in {nshards} shards; leases: granted {} expired {} \
+                 retried {} duplicates {}{}",
+                metrics.systems,
+                t.granted,
+                t.expired,
+                t.retried,
+                t.duplicates,
+                if t.degraded { "  DEGRADED" } else { "" }
+            );
+            println!(
+                "ops: matvecs {}  precond {}  ortho_flops {}  \
+                 recycle carry/reseed/harvest {}/{}/{}",
+                metrics.counters.matvecs,
+                metrics.counters.precond_applies,
+                metrics.counters.ortho_flops,
+                metrics.counters.recycle_carries,
+                metrics.counters.recycle_reseeds,
+                metrics.counters.harvests
+            );
+            println!("dataset: {} ({} samples)", ds.dir.display(), ds.count);
+            dataset = Some(ds);
+        }
+        // Linger so stragglers get a clean `finished` instead of a dead
+        // socket, then stop accepting.
+        let t = *finished_at.get_or_insert(now_ms);
+        if now_ms.saturating_sub(t) >= cfg.linger_ms {
+            break;
+        }
+    }
+
+    Ok(DistSummary {
+        systems: metrics.systems,
+        shards: nshards,
+        granted: coord.table.granted,
+        expired: coord.table.expired,
+        retried: coord.table.retried,
+        duplicates: coord.table.duplicates,
+        degraded: coord.table.degraded,
+        bytes_merged: coord.bytes_merged,
+        dataset,
+        metrics,
+        spans: coord.recorder.spans(),
+    })
+}
+
+/// Everything an accepted shard contributes beyond the dataset rows,
+/// buffered so the run metrics can be folded in shard order (matching the
+/// single-node aggregation bit for bit).
+struct ShardDone {
+    stats: Vec<SolveStats>,
+    counters: SolveCounters,
+    sparsity_reuse: usize,
+    symbolic_reuse: usize,
+    workspace_reuse: usize,
+}
+
+struct Coord {
+    lease_cfg: LeaseConfig,
+    table: LeaseTable,
+    writer: Option<DatasetWriter>,
+    done: Vec<Option<ShardDone>>,
+    /// Recorder-relative start of each shard's latest grant.
+    grant_started: Vec<f64>,
+    recorder: Recorder,
+    gen_seconds: f64,
+    sort_seconds: f64,
+    bytes_merged: u64,
+    plan_body: String,
+    input_dim: usize,
+    sol_dim: usize,
+}
+
+fn err_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).dump()
+}
+
+fn serve_one(coord: &mut Coord, stream: &mut TcpStream, epoch: &Instant) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    let req = read_request_capped(stream, MAX_RESULT_BODY)?;
+    let now_ms = epoch.elapsed().as_millis() as u64;
+    let resp = coord.handle(&req, now_ms);
+    write_response(stream, &resp)
+}
+
+impl Coord {
+    fn handle(&mut self, req: &Request, now_ms: u64) -> Response {
+        match self.route(req, now_ms) {
+            Ok(resp) => resp,
+            Err(e) => Response::json(500, err_body(&format!("{e:#}"))),
+        }
+    }
+
+    fn route(&mut self, req: &Request, now_ms: u64) -> Result<Response> {
+        let segs = req.segments();
+        Ok(match (req.method.as_str(), segs.as_slice()) {
+            ("GET", ["plan"]) => Response::json(200, self.plan_body.clone()),
+            ("GET", ["healthz"]) => Response::json(
+                200,
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("done", Json::Bool(self.table.all_done())),
+                ])
+                .dump(),
+            ),
+            ("GET", ["metrics"]) => Response::text(200, self.metrics_text()),
+            ("POST", ["lease"]) => self.lease(req, now_ms)?,
+            ("POST", ["heartbeat"]) => self.heartbeat(req, now_ms)?,
+            ("POST", ["shards", id, "result"]) => match id.parse::<usize>() {
+                Ok(shard) => self.result(shard, req, now_ms)?,
+                Err(_) => Response::json(400, err_body("shard id must be an integer")),
+            },
+            ("GET" | "POST" | "DELETE", _) => Response::json(404, err_body("no such endpoint")),
+            _ => Response::json(405, err_body("method not allowed")),
+        })
+    }
+
+    fn lease(&mut self, req: &Request, now_ms: u64) -> Result<Response> {
+        let j = parse_body(req)?;
+        let worker = j.get("worker").and_then(|v| v.as_str()).unwrap_or("anon").to_string();
+        let body = match self.table.grant(&worker, now_ms) {
+            Grant::Lease { shard, attempt, ids, deadline_ms } => {
+                self.grant_started[shard] = self.recorder.now();
+                println!(
+                    "lease shard {shard} attempt {attempt} -> {worker} ({} systems)",
+                    ids.len()
+                );
+                Json::obj(vec![
+                    ("grant", Json::Str("lease".into())),
+                    ("shard", Json::Num(shard as f64)),
+                    ("attempt", Json::Num(attempt as f64)),
+                    ("lease_ms", Json::Num(self.lease_cfg.lease_ms as f64)),
+                    ("deadline_ms", Json::Num(deadline_ms as f64)),
+                    ("ids", Json::Arr(ids.iter().map(|&i| Json::Num(i as f64)).collect())),
+                ])
+            }
+            Grant::Wait { retry_ms } => Json::obj(vec![
+                ("grant", Json::Str("wait".into())),
+                ("retry_ms", Json::Num(retry_ms as f64)),
+            ]),
+            Grant::Finished => Json::obj(vec![("grant", Json::Str("finished".into()))]),
+        };
+        Ok(Response::json(200, body.dump()))
+    }
+
+    fn heartbeat(&mut self, req: &Request, now_ms: u64) -> Result<Response> {
+        let j = parse_body(req)?;
+        let num = |key: &str| -> Result<usize> {
+            j.get(key).and_then(|v| v.as_usize()).with_context(|| format!("missing {key:?}"))
+        };
+        let worker = j.get("worker").and_then(|v| v.as_str()).unwrap_or("anon").to_string();
+        let ok = self.table.heartbeat(num("shard")?, num("attempt")? as u32, &worker, now_ms);
+        Ok(Response::json(200, Json::obj(vec![("ok", Json::Bool(ok))]).dump()))
+    }
+
+    fn result(&mut self, shard: usize, req: &Request, now_ms: u64) -> Result<Response> {
+        let msg = ShardResultMsg::from_json(&parse_body(req)?)?;
+        if msg.shard != shard {
+            return Ok(Response::json(
+                400,
+                err_body(&format!("body says shard {} but path says {shard}", msg.shard)),
+            ));
+        }
+        let Some(planned) = self.table.shard_ids(shard) else {
+            return Ok(Response::json(404, err_body(&format!("no shard {shard}"))));
+        };
+        let got: Vec<usize> = msg.systems.iter().map(|s| s.id).collect();
+        if got != planned {
+            return Ok(Response::json(
+                400,
+                err_body(&format!("shard {shard} ids {got:?} do not match the plan")),
+            ));
+        }
+        for sys in &msg.systems {
+            if sys.input.len() != self.input_dim || sys.solution.len() != self.sol_dim {
+                return Ok(Response::json(
+                    400,
+                    err_body(&format!("system {} has wrong dimensions", sys.id)),
+                ));
+            }
+        }
+        // Integrity: recompute the checksum over the received bytes. A
+        // mismatch means the payload was corrupted in flight — requeue so
+        // another lease can re-solve the shard. Only the live lease holder
+        // may trigger the requeue (the heartbeat probe checks exactly
+        // that), so a corrupt *stale* payload can't clobber a newer lease.
+        if shard_checksum(&msg.systems) != msg.checksum {
+            if self.table.heartbeat(shard, msg.attempt, &msg.worker, now_ms) {
+                self.table.requeue(shard, now_ms);
+            }
+            return Ok(Response::json(
+                400,
+                err_body(&format!("shard {shard} checksum mismatch; requeued")),
+            ));
+        }
+        match self.table.complete(shard, msg.attempt, &msg.worker, msg.checksum, now_ms) {
+            Disposition::Accepted => {
+                let writer = self.writer.as_mut().context("dataset already finalized")?;
+                for sys in &msg.systems {
+                    writer.put(sys.id, &sys.input, &sys.solution)?;
+                }
+                self.bytes_merged += req.body.len() as u64;
+                let start = self.grant_started[shard];
+                self.recorder.record(
+                    &format!("dist/shard{shard}"),
+                    Some(shard),
+                    start,
+                    self.recorder.now() - start,
+                );
+                self.done[shard] = Some(ShardDone {
+                    stats: msg.systems.into_iter().map(|s| s.stats).collect(),
+                    counters: msg.counters,
+                    sparsity_reuse: msg.sparsity_reuse,
+                    symbolic_reuse: msg.symbolic_reuse,
+                    workspace_reuse: msg.workspace_reuse,
+                });
+                Ok(Response::json(200, disposition_body("accepted")))
+            }
+            Disposition::Duplicate { accepted_checksum } => {
+                if accepted_checksum != msg.checksum {
+                    // Two solves of the same shard disagreed bit-for-bit:
+                    // the determinism contract is broken, flag the run.
+                    self.table.degraded = true;
+                    eprintln!(
+                        "WARNING: shard {shard} re-solve produced different bits \
+                         ({:016x} vs accepted {:016x})",
+                        msg.checksum, accepted_checksum
+                    );
+                    return Ok(Response::json(
+                        409,
+                        err_body(&format!("shard {shard} duplicate diverged from accepted result")),
+                    ));
+                }
+                Ok(Response::json(200, disposition_body("duplicate")))
+            }
+            Disposition::Stale => Ok(Response::json(200, disposition_body("stale"))),
+            Disposition::UnknownShard => {
+                Ok(Response::json(404, err_body(&format!("no shard {shard}"))))
+            }
+        }
+    }
+
+    /// Fold accepted shards **in shard order** — the same order the
+    /// single-node pipeline reduces its workers — so every aggregate
+    /// (including f64 sums) matches `skr generate` exactly.
+    fn fold_metrics(&self) -> RunMetrics {
+        let mut m = RunMetrics {
+            gen_seconds: self.gen_seconds,
+            sort_seconds: self.sort_seconds,
+            ..Default::default()
+        };
+        for d in self.done.iter().flatten() {
+            for s in &d.stats {
+                m.absorb(s);
+            }
+            m.sparsity_reuse += d.sparsity_reuse;
+            m.symbolic_reuse += d.symbolic_reuse;
+            m.workspace_reuse += d.workspace_reuse;
+            m.counters.merge(&d.counters);
+        }
+        m
+    }
+
+    fn metrics_text(&self) -> String {
+        use std::fmt::Write as _;
+        let t = &self.table;
+        let mut out = String::new();
+        let mut series = |name: &str, kind: &str, v: f64| {
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        series("skr_dist_leases_granted_total", "counter", t.granted as f64);
+        series("skr_dist_leases_expired_total", "counter", t.expired as f64);
+        series("skr_dist_leases_retried_total", "counter", t.retried as f64);
+        series("skr_dist_duplicates_total", "counter", t.duplicates as f64);
+        series("skr_dist_bytes_merged_total", "counter", self.bytes_merged as f64);
+        series("skr_dist_shards_total", "gauge", t.shard_count() as f64);
+        series("skr_dist_shards_done", "gauge", t.done_count() as f64);
+        series("skr_dist_degraded", "gauge", if t.degraded { 1.0 } else { 0.0 });
+        out.push_str(&self.fold_metrics().prometheus_text());
+        out
+    }
+}
+
+fn disposition_body(d: &str) -> String {
+    Json::obj(vec![("disposition", Json::Str(d.to_string()))]).dump()
+}
+
+fn parse_body(req: &Request) -> Result<Json> {
+    let text = std::str::from_utf8(&req.body).context("body must be UTF-8 JSON")?;
+    if text.trim().is_empty() {
+        return Ok(Json::obj(vec![]));
+    }
+    Json::parse(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_args_defaults_mirror_generate() {
+        let args = Args::parse(std::iter::empty());
+        let cfg = CoordinateConfig::from_args(&args);
+        assert_eq!(cfg.bind, "127.0.0.1:7171");
+        assert_eq!(cfg.spec, JobSpec::default());
+        assert_eq!(cfg.shards, cfg.spec.threads, "--shards defaults to the spec's threads");
+        assert_eq!(cfg.lease.lease_ms, 30_000);
+        assert_eq!(cfg.lease.max_attempts, 3);
+        assert_eq!(cfg.lease.backoff_ms, 500);
+    }
+
+    #[test]
+    fn from_args_overrides() {
+        let args = Args::parse(
+            "coordinate --port 0 --count 8 --threads 2 --shards 3 --lease-ms 2000 \
+             --max-attempts 5 --backoff-ms 50"
+                .split_whitespace()
+                .map(str::to_string),
+        );
+        let cfg = CoordinateConfig::from_args(&args);
+        assert_eq!(cfg.bind, "127.0.0.1:0");
+        assert_eq!(cfg.shards, 3);
+        assert_eq!(cfg.spec.count, 8);
+        assert_eq!(cfg.lease.lease_ms, 2_000);
+        assert_eq!(cfg.lease.max_attempts, 5);
+        assert_eq!(cfg.lease.backoff_ms, 50);
+    }
+}

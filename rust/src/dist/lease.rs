@@ -1,0 +1,511 @@
+//! The coordinator's lease table: a single-threaded, clock-injected state
+//! machine over the run's shards. Every method takes `now_ms` so the whole
+//! grant → heartbeat → expiry → re-grant → duplicate-rejection lifecycle is
+//! testable without sockets or sleeps.
+//!
+//! Shard lifecycle: `Queued` —grant→ `Leased` —result→ `Done`. A lease that
+//! misses its heartbeat deadline expires back to `Queued` with exponential
+//! backoff; a shard that burns through `max_attempts` grants keeps being
+//! retried (the run should still finish if a worker eventually shows up)
+//! but flags the run **degraded** so operators know retries exceeded the
+//! budget. `Done` is terminal: a late or repeated result for a finished
+//! shard is rejected, and its checksum is compared against the accepted one
+//! — a mismatch between two solves of the same shard means nondeterminism
+//! or corruption, the one thing a bit-identical pipeline must never shrug
+//! off.
+
+/// Retry/timeout policy for one run.
+#[derive(Debug, Clone, Copy)]
+pub struct LeaseConfig {
+    /// Lease lifetime without a heartbeat renewal.
+    pub lease_ms: u64,
+    /// Grants per shard before the run is flagged degraded.
+    pub max_attempts: u32,
+    /// Base requeue delay after an expiry; doubles per prior attempt,
+    /// capped at `lease_ms`.
+    pub backoff_ms: u64,
+}
+
+impl Default for LeaseConfig {
+    fn default() -> Self {
+        LeaseConfig { lease_ms: 30_000, max_attempts: 3, backoff_ms: 500 }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Phase {
+    Queued { not_before_ms: u64 },
+    Leased { worker: String, attempt: u32, deadline_ms: u64 },
+    Done { checksum: u64 },
+}
+
+#[derive(Debug, Clone)]
+struct Slot {
+    ids: Vec<usize>,
+    phase: Phase,
+    /// Total grants handed out for this shard.
+    attempts: u32,
+}
+
+/// Answer to a lease request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Grant {
+    /// Work on these systems; renew before `deadline_ms`.
+    Lease { shard: usize, attempt: u32, ids: Vec<usize>, deadline_ms: u64 },
+    /// Nothing grantable right now (all leased or backing off) — poll again.
+    Wait { retry_ms: u64 },
+    /// Every shard is done; the worker can exit.
+    Finished,
+}
+
+/// Verdict on a submitted shard result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Disposition {
+    /// First valid result for the shard under a live lease — merge it.
+    Accepted,
+    /// The lease this result belongs to expired or was re-granted; the
+    /// payload is discarded (merging it would double-fill the dataset).
+    Stale,
+    /// The shard already completed; carries the accepted checksum so the
+    /// caller can cross-verify that the two solves agreed bit-for-bit.
+    Duplicate { accepted_checksum: u64 },
+    /// No such shard in the plan.
+    UnknownShard,
+}
+
+/// Lease bookkeeping for one distributed run.
+#[derive(Debug)]
+pub struct LeaseTable {
+    slots: Vec<Slot>,
+    cfg: LeaseConfig,
+    /// Leases handed out (`skr_dist_leases_granted_total`).
+    pub granted: u64,
+    /// Leases that missed their deadline (`skr_dist_leases_expired_total`).
+    pub expired: u64,
+    /// Requeues caused by expiry or checksum failure
+    /// (`skr_dist_leases_retried_total`).
+    pub retried: u64,
+    /// Results rejected as duplicate or stale.
+    pub duplicates: u64,
+    /// Some shard exceeded the attempt budget.
+    pub degraded: bool,
+}
+
+impl LeaseTable {
+    pub fn new(shards: Vec<Vec<usize>>, cfg: LeaseConfig) -> LeaseTable {
+        LeaseTable {
+            slots: shards
+                .into_iter()
+                .map(|ids| Slot { ids, phase: Phase::Queued { not_before_ms: 0 }, attempts: 0 })
+                .collect(),
+            cfg,
+            granted: 0,
+            expired: 0,
+            retried: 0,
+            duplicates: 0,
+            degraded: false,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn done_count(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s.phase, Phase::Done { .. })).count()
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.done_count() == self.slots.len()
+    }
+
+    /// The planned ids of one shard (used to validate result payloads).
+    pub fn shard_ids(&self, shard: usize) -> Option<&[usize]> {
+        self.slots.get(shard).map(|s| s.ids.as_slice())
+    }
+
+    /// Sweep expired leases back to the queue (with backoff). Called from
+    /// every public entry point, so callers never observe a lapsed lease.
+    fn expire(&mut self, now_ms: u64) {
+        for slot in &mut self.slots {
+            let deadline = match &slot.phase {
+                Phase::Leased { deadline_ms, .. } => *deadline_ms,
+                _ => continue,
+            };
+            if now_ms < deadline {
+                continue;
+            }
+            self.expired += 1;
+            self.retried += 1;
+            if slot.attempts >= self.cfg.max_attempts {
+                self.degraded = true;
+            }
+            // Exponential backoff on the attempts already burned, capped so
+            // a flapping worker can't park a shard forever.
+            let shift = slot.attempts.saturating_sub(1).min(16);
+            let backoff = (self.cfg.backoff_ms << shift).min(self.cfg.lease_ms);
+            slot.phase = Phase::Queued { not_before_ms: now_ms + backoff };
+        }
+    }
+
+    /// Hand `worker` the lowest-numbered grantable shard, or say why not.
+    pub fn grant(&mut self, worker: &str, now_ms: u64) -> Grant {
+        self.expire(now_ms);
+        if self.all_done() {
+            return Grant::Finished;
+        }
+        let mut pick = None;
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Phase::Queued { not_before_ms } = slot.phase {
+                if now_ms >= not_before_ms {
+                    pick = Some(i);
+                    break;
+                }
+            }
+        }
+        if let Some(i) = pick {
+            let slot = &mut self.slots[i];
+            slot.attempts += 1;
+            self.granted += 1;
+            let deadline_ms = now_ms + self.cfg.lease_ms;
+            slot.phase = Phase::Leased {
+                worker: worker.to_string(),
+                attempt: slot.attempts,
+                deadline_ms,
+            };
+            return Grant::Lease {
+                shard: i,
+                attempt: slot.attempts,
+                ids: slot.ids.clone(),
+                deadline_ms,
+            };
+        }
+        // Nothing grantable: tell the worker when the earliest backoff or
+        // lease deadline lands, clamped to a sane polling interval.
+        let next = self
+            .slots
+            .iter()
+            .filter_map(|s| match &s.phase {
+                Phase::Queued { not_before_ms } => Some(*not_before_ms),
+                Phase::Leased { deadline_ms, .. } => Some(*deadline_ms),
+                Phase::Done { .. } => None,
+            })
+            .min()
+            .unwrap_or(now_ms);
+        Grant::Wait { retry_ms: next.saturating_sub(now_ms).clamp(50, 2_000) }
+    }
+
+    /// Renew a live lease. Returns `false` (worker should abandon the
+    /// shard) if the lease already expired, was re-granted, or finished.
+    pub fn heartbeat(&mut self, shard: usize, attempt: u32, worker: &str, now_ms: u64) -> bool {
+        self.expire(now_ms);
+        let lease_ms = self.cfg.lease_ms;
+        let Some(slot) = self.slots.get_mut(shard) else { return false };
+        match &mut slot.phase {
+            Phase::Leased { worker: w, attempt: a, deadline_ms }
+                if *a == attempt && w.as_str() == worker =>
+            {
+                *deadline_ms = now_ms + lease_ms;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Judge a submitted result. `Accepted` transitions the shard to
+    /// `Done { checksum }`; everything else leaves the table unchanged
+    /// apart from the duplicate tally.
+    pub fn complete(
+        &mut self,
+        shard: usize,
+        attempt: u32,
+        worker: &str,
+        checksum: u64,
+        now_ms: u64,
+    ) -> Disposition {
+        self.expire(now_ms);
+        let Some(slot) = self.slots.get_mut(shard) else { return Disposition::UnknownShard };
+        let rejected = match &slot.phase {
+            Phase::Done { checksum: accepted } => {
+                Some(Disposition::Duplicate { accepted_checksum: *accepted })
+            }
+            Phase::Leased { worker: w, attempt: a, .. }
+                if *a == attempt && w.as_str() == worker =>
+            {
+                None
+            }
+            // Expired-then-resubmitted, or a racing older attempt while a
+            // newer lease is live: either way, not mergeable.
+            _ => Some(Disposition::Stale),
+        };
+        match rejected {
+            Some(d) => {
+                self.duplicates += 1;
+                d
+            }
+            None => {
+                slot.phase = Phase::Done { checksum };
+                Disposition::Accepted
+            }
+        }
+    }
+
+    /// Requeue a shard whose accepted-path validation failed downstream
+    /// (e.g. payload checksum mismatch) so another lease can retry it.
+    pub fn requeue(&mut self, shard: usize, now_ms: u64) {
+        let max_attempts = self.cfg.max_attempts;
+        let backoff_ms = self.cfg.backoff_ms;
+        if let Some(slot) = self.slots.get_mut(shard) {
+            if !matches!(slot.phase, Phase::Done { .. }) {
+                self.retried += 1;
+                if slot.attempts >= max_attempts {
+                    self.degraded = true;
+                }
+                slot.phase = Phase::Queued { not_before_ms: now_ms + backoff_ms };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, Config};
+
+    fn table(lease_ms: u64) -> LeaseTable {
+        LeaseTable::new(
+            vec![vec![0, 1], vec![2, 3], vec![4]],
+            LeaseConfig { lease_ms, max_attempts: 2, backoff_ms: 100 },
+        )
+    }
+
+    fn lease_of(g: Grant) -> (usize, u32, Vec<usize>) {
+        match g {
+            Grant::Lease { shard, attempt, ids, .. } => (shard, attempt, ids),
+            other => panic!("expected a lease, got {other:?}"),
+        }
+    }
+
+    /// Poll `grant` until a lease lands, advancing the injected clock
+    /// through `Wait` answers exactly like a live worker would.
+    fn next_lease(t: &mut LeaseTable, now: &mut u64, w: &str) -> (usize, u32, Vec<usize>) {
+        loop {
+            match t.grant(w, *now) {
+                Grant::Lease { shard, attempt, ids, .. } => return (shard, attempt, ids),
+                Grant::Wait { retry_ms } => *now += retry_ms.max(1),
+                Grant::Finished => panic!("finished before a lease was granted"),
+            }
+        }
+    }
+
+    #[test]
+    fn lifecycle_grant_heartbeat_expire_regrant_duplicate() {
+        let mut t = table(1_000);
+        // Grant: lowest queued shard first.
+        let (shard, attempt, ids) = lease_of(t.grant("w1", 0));
+        assert_eq!((shard, attempt), (0, 1));
+        assert_eq!(ids, vec![0, 1]);
+        // Heartbeat renews past the original deadline.
+        assert!(t.heartbeat(0, 1, "w1", 900));
+        let g = t.grant("w2", 1_500); // w1's lease is renewed until 1_900
+        assert_eq!(lease_of(g).0, 1, "renewed shard 0 must not be re-granted");
+        // No heartbeats → both leases lapse. The grant at 2_500 detects the
+        // expiries (requeue with backoff) and hands out untouched shard 2.
+        let (s, a, _) = lease_of(t.grant("w2", 2_500));
+        assert_eq!((s, a), (2, 1));
+        assert_eq!(t.expired, 2, "both w1's shard-0 and w2's shard-1 leases lapsed");
+        // Once the backoff passes, shard 0 is re-granted with a bumped attempt.
+        let mut now = 2_700;
+        let (s, a, ids) = next_lease(&mut t, &mut now, "w3");
+        assert_eq!((s, a), (0, 2));
+        assert_eq!(ids, vec![0, 1], "re-granted shard carries the same ids");
+        // The expired holder's result is stale, not mergeable.
+        assert_eq!(t.complete(0, 1, "w1", 0xAAAA, now + 10), Disposition::Stale);
+        // The live lease completes.
+        assert_eq!(t.complete(0, 2, "w3", 0xBEEF, now + 20), Disposition::Accepted);
+        // A duplicate is rejected and reports the accepted checksum.
+        assert_eq!(
+            t.complete(0, 2, "w3", 0xBEEF, now + 30),
+            Disposition::Duplicate { accepted_checksum: 0xBEEF }
+        );
+        assert!(!t.all_done());
+        assert_eq!(t.done_count(), 1);
+        assert_eq!(t.duplicates, 2);
+        assert_eq!(t.complete(99, 1, "w3", 0, now + 40), Disposition::UnknownShard);
+    }
+
+    #[test]
+    fn heartbeat_of_lapsed_or_regranted_lease_fails() {
+        let mut t = table(1_000);
+        let (shard, attempt, _) = lease_of(t.grant("w1", 0));
+        // At the deadline the heartbeat itself observes the expiry.
+        assert!(!t.heartbeat(shard, attempt, "w1", 1_000));
+        // Inside the backoff window shard 0 is not grantable; shard 1 is.
+        assert!(matches!(t.grant("w1", 1_050), Grant::Lease { shard: 1, .. }));
+        let (s2, a2, _) = lease_of(t.grant("w2", 1_200));
+        assert_eq!((s2, a2), (0, 2));
+        // The old holder can't renew the re-granted lease either.
+        assert!(!t.heartbeat(0, 1, "w1", 1_300));
+        assert!(t.heartbeat(0, 2, "w2", 1_300));
+    }
+
+    #[test]
+    fn exceeding_attempt_budget_flags_degraded_but_run_can_finish() {
+        let mut t = LeaseTable::new(
+            vec![vec![0]],
+            LeaseConfig { lease_ms: 100, max_attempts: 2, backoff_ms: 10 },
+        );
+        let mut now = 0;
+        for expected_attempt in 1..=3u32 {
+            let (_, attempt, _) = next_lease(&mut t, &mut now, "w");
+            assert_eq!(attempt, expected_attempt);
+            now += 10_000; // let the lease lapse
+        }
+        assert!(t.degraded, "a third grant means the 2-attempt budget was blown");
+        let (_, attempt, _) = next_lease(&mut t, &mut now, "w");
+        assert_eq!(t.complete(0, attempt, "w", 7, now), Disposition::Accepted);
+        assert!(t.all_done(), "degraded runs still complete");
+        assert!(matches!(t.grant("w", now + 1), Grant::Finished));
+    }
+
+    #[test]
+    fn wait_tells_the_worker_when_to_come_back() {
+        let mut t = table(1_000);
+        let _ = t.grant("w1", 0);
+        let _ = t.grant("w1", 0);
+        let _ = t.grant("w1", 0);
+        match t.grant("w2", 0) {
+            Grant::Wait { retry_ms } => assert!((50..=2_000).contains(&retry_ms), "{retry_ms}"),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn requeue_after_downstream_rejection_allows_retry() {
+        let mut t = table(1_000);
+        let (shard, attempt, _) = lease_of(t.grant("w1", 0));
+        assert_eq!(t.complete(shard, attempt, "w1", 1, 10), Disposition::Accepted);
+        // Done shards are immune to requeue.
+        t.requeue(shard, 20);
+        assert_eq!(t.done_count(), 1);
+        // A live lease can be requeued (the checksum-mismatch path).
+        let (s2, _, _) = lease_of(t.grant("w1", 30));
+        t.requeue(s2, 40);
+        let mut now = 150;
+        let (s3, a3, _) = next_lease(&mut t, &mut now, "w2");
+        assert_eq!(s3, s2);
+        assert_eq!(a3, 2);
+    }
+
+    /// Propcheck: drive random op sequences and assert the machine never
+    /// violates its core invariants — socket-free, clock-injected.
+    #[test]
+    fn random_op_sequences_preserve_invariants() {
+        propcheck::check_msg(
+            "lease_table_invariants",
+            Config { cases: 128, seed: 0xD157 },
+            |rng| {
+                let shards = 1 + rng.below(4);
+                let ops: Vec<(u8, usize, usize)> = (0..60)
+                    .map(|_| (rng.below(4) as u8, rng.below(shards), rng.below(3)))
+                    .collect();
+                (shards, ops)
+            },
+            |(shards, ops)| {
+                let mut t = LeaseTable::new(
+                    (0..*shards).map(|s| vec![s]).collect(),
+                    LeaseConfig { lease_ms: 50, max_attempts: 2, backoff_ms: 5 },
+                );
+                let mut now = 0u64;
+                let workers = ["wa", "wb", "wc"];
+                // Leases we believe are live: (shard, attempt, worker index).
+                let mut live: Vec<(usize, u32, usize)> = Vec::new();
+                let mut accepted = std::collections::BTreeMap::<usize, u64>::new();
+                for &(op, target, widx) in ops {
+                    now += 13; // time always advances
+                    match op {
+                        0 => {
+                            if let Grant::Lease { shard, attempt, ids, .. } =
+                                t.grant(workers[widx], now)
+                            {
+                                if accepted.contains_key(&shard) {
+                                    return Err(format!("re-granted done shard {shard}"));
+                                }
+                                if ids != [shard] {
+                                    return Err(format!("shard {shard} ids changed: {ids:?}"));
+                                }
+                                live.retain(|(s, _, _)| *s != shard);
+                                live.push((shard, attempt, widx));
+                            }
+                        }
+                        1 => {
+                            if let Some(&(s, a, lw)) = live.iter().find(|(s, _, _)| *s == target) {
+                                let _ = t.heartbeat(s, a, workers[lw], now);
+                            }
+                        }
+                        2 => {
+                            if let Some(pos) = live.iter().position(|(s, _, _)| *s == target) {
+                                let (s, a, lw) = live.remove(pos);
+                                let sum = ((s as u64) << 8) | 1;
+                                match t.complete(s, a, workers[lw], sum, now) {
+                                    Disposition::Accepted => {
+                                        if accepted.insert(s, sum).is_some() {
+                                            return Err(format!("shard {s} accepted twice"));
+                                        }
+                                    }
+                                    Disposition::Duplicate { accepted_checksum } => {
+                                        if accepted.get(&s) != Some(&accepted_checksum) {
+                                            return Err(format!(
+                                                "duplicate for {s} reported wrong checksum"
+                                            ));
+                                        }
+                                    }
+                                    Disposition::Stale => {}
+                                    Disposition::UnknownShard => {
+                                        return Err(format!("known shard {s} reported unknown"));
+                                    }
+                                }
+                            }
+                        }
+                        _ => now += 200, // long stall: leases lapse
+                    }
+                    if t.done_count() != accepted.len() {
+                        return Err(format!(
+                            "done_count {} diverged from accepted {}",
+                            t.done_count(),
+                            accepted.len()
+                        ));
+                    }
+                }
+                // Drain: keep granting + completing until finished.
+                let mut guard = 0;
+                while !t.all_done() {
+                    now += 29;
+                    match t.grant("drain", now) {
+                        Grant::Lease { shard, attempt, .. } => {
+                            let sum = ((shard as u64) << 8) | 1;
+                            if t.complete(shard, attempt, "drain", sum, now)
+                                == Disposition::Accepted
+                            {
+                                accepted.insert(shard, sum);
+                            }
+                        }
+                        Grant::Wait { retry_ms } => now += retry_ms,
+                        Grant::Finished => break,
+                    }
+                    guard += 1;
+                    if guard > 10_000 {
+                        return Err("drain did not converge".into());
+                    }
+                }
+                if !t.all_done() || accepted.len() != *shards {
+                    return Err(format!("run never finished: {}/{shards} done", accepted.len()));
+                }
+                if t.granted < *shards as u64 {
+                    return Err("fewer grants than shards".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

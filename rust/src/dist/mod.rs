@@ -1,0 +1,42 @@
+//! L5 distributed generation — `skr coordinate` / `skr work`.
+//!
+//! One coordinator plans a run exactly like single-node `skr generate`
+//! (parameter pass → similarity sort → contiguous shards, see
+//! [`crate::coordinator::RunPlan`]) and serves shard **leases** over the
+//! same HTTP/JSON framing as `skr serve`; any number of workers join, pull
+//! leases, solve their shards with per-shard Krylov recycling, and stream
+//! the solutions back.
+//!
+//! | Method & path             | Body → response                            |
+//! |---------------------------|--------------------------------------------|
+//! | `GET /plan`               | run spec + shard layout + protocol version |
+//! | `POST /lease`             | `{worker}` → lease / wait / finished       |
+//! | `POST /heartbeat`         | `{shard, attempt, worker}` → `{ok}`        |
+//! | `POST /shards/:id/result` | shard result → `{disposition}`             |
+//! | `GET /metrics`            | Prometheus text (`skr_dist_*` + run)       |
+//! | `GET /healthz`            | liveness + run completion                  |
+//!
+//! **Fault tolerance.** Leases expire unless heartbeats renew them; an
+//! expired or failed shard is requeued with exponential backoff and
+//! re-granted (bounded attempts — exceeding the budget flags the run
+//! *degraded* but does not abort it). Duplicate and stale results are
+//! rejected instead of merged twice ([`crate::coordinator::dataset`]'s
+//! double-fill guard backstops this at the writer).
+//!
+//! **Bit-identity.** Each shard is a contiguous slice of the sorted order,
+//! solved sequentially from fresh recycling state — exactly what one
+//! single-node worker thread does — and every payload that must survive
+//! the network exactly (solutions, inputs, residual bits, u64 counters)
+//! travels as fixed-width hex ([`protocol`]). Per-shard FNV checksums are
+//! verified on receipt and cross-checked between duplicate solves, so a
+//! distributed run is provably byte-identical to `skr generate --threads S`
+//! on one machine, down to the summed [`crate::solver::SolveCounters`].
+
+pub mod coordinator;
+pub mod lease;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{coordinate, coordinate_bound, CoordinateConfig, DistSummary};
+pub use lease::{Disposition, Grant, LeaseConfig, LeaseTable};
+pub use worker::{work, WorkerConfig};

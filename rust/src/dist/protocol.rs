@@ -1,0 +1,360 @@
+//! The dist wire format: JSON envelopes over `service::http`, with every
+//! payload that must survive the network **bit-exactly** (solutions, input
+//! fields, residuals, 64-bit op counters and checksums) carried as
+//! fixed-width lowercase hex rather than JSON numbers.
+//!
+//! Why hex: the crate's JSON emitter prints integral `f64`s through an
+//! integer fast path, which erases the sign of `-0.0`, and a `u64` counter
+//! above 2⁵³ cannot round-trip an `f64` at all. Sixteen hex chars per value
+//! encode the exact little-endian bytes, so a distributed run can be
+//! byte-compared against a single-node one.
+//!
+//! | Method & path              | Body → response                           |
+//! |----------------------------|-------------------------------------------|
+//! | `GET /plan`                | run spec + shard layout + protocol version|
+//! | `POST /lease`              | `{worker}` → lease / wait / finished      |
+//! | `POST /heartbeat`          | `{shard, attempt, worker}` → `{ok}`       |
+//! | `POST /shards/:id/result`  | [`ShardResultMsg`] → `{disposition}`      |
+//! | `GET /metrics`             | Prometheus text (`skr_dist_*` + run)      |
+
+use crate::solver::{SolveCounters, SolveStats, StopReason};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Bumped on every incompatible wire change; `/plan` advertises it and
+/// workers refuse to join a coordinator speaking another version.
+pub const PROTOCOL_VERSION: usize = 1;
+
+/// Body cap for `POST /shards/:id/result` — a shard of solutions dwarfs the
+/// service API's 4 MB default.
+pub const MAX_RESULT_BODY: usize = 256 * 1024 * 1024;
+
+/// Encode a `u64` as 16 lowercase hex chars (big-endian digit order).
+pub fn hex_u64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Inverse of [`hex_u64`].
+pub fn parse_hex_u64(s: &str) -> Result<u64> {
+    if s.len() != 16 {
+        bail!("expected 16 hex chars, got {} in {s:?}", s.len());
+    }
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex u64 {s:?}"))
+}
+
+/// Encode a slice of `f64`s as one hex string: 16 chars per value, each the
+/// little-endian byte image. Exact for every value including `-0.0`, NaN
+/// payloads and subnormals.
+pub fn encode_f64s(xs: &[f64]) -> String {
+    let mut out = String::with_capacity(xs.len() * 16);
+    for x in xs {
+        for b in x.to_le_bytes() {
+            out.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+            out.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode_f64s`].
+pub fn decode_f64s(s: &str) -> Result<Vec<f64>> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 16 != 0 {
+        bail!("hex f64 payload length {} is not a multiple of 16", bytes.len());
+    }
+    let nibble = |c: u8| -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            other => bail!("bad hex digit {:?}", other as char),
+        }
+    };
+    let mut out = Vec::with_capacity(bytes.len() / 16);
+    for chunk in bytes.chunks_exact(16) {
+        let mut le = [0u8; 8];
+        for (i, pair) in chunk.chunks_exact(2).enumerate() {
+            le[i] = (nibble(pair[0])? << 4) | nibble(pair[1])?;
+        }
+        out.push(f64::from_le_bytes(le));
+    }
+    Ok(out)
+}
+
+/// Streaming FNV-1a (64-bit) — the shard integrity checksum. Deliberately
+/// simple and dependency-free; it guards against transport corruption and
+/// nondeterministic re-solves, not adversaries.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64(0xcbf29ce484222325)
+    }
+}
+
+impl Fnv64 {
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Checksum one solved shard: for each system in shard order, the original
+/// id (little-endian `u64`) then the exact input and solution bytes. Both
+/// sides compute this over their own copy, so a flipped bit anywhere in the
+/// payload — or a re-solve that didn't reproduce the same bits — is caught.
+pub fn shard_checksum(systems: &[SystemResult]) -> u64 {
+    let mut h = Fnv64::default();
+    for sys in systems {
+        h.update(&(sys.id as u64).to_le_bytes());
+        for x in &sys.input {
+            h.update(&x.to_le_bytes());
+        }
+        for x in &sys.solution {
+            h.update(&x.to_le_bytes());
+        }
+    }
+    h.finish()
+}
+
+pub fn counters_to_json(c: &SolveCounters) -> Json {
+    Json::obj(c.fields().iter().map(|&(name, v)| (name, Json::Str(hex_u64(v)))).collect())
+}
+
+pub fn counters_from_json(j: &Json) -> Result<SolveCounters> {
+    let field = |key: &str| -> Result<u64> {
+        parse_hex_u64(
+            j.get(key)
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("counters missing {key:?}"))?,
+        )
+    };
+    Ok(SolveCounters {
+        matvecs: field("matvecs")?,
+        precond_applies: field("precond_applies")?,
+        ortho_flops: field("ortho_flops")?,
+        recycle_reseeds: field("recycle_reseeds")?,
+        recycle_carries: field("recycle_carries")?,
+        harvests: field("harvests")?,
+    })
+}
+
+/// One solved system on the wire.
+#[derive(Debug, Clone)]
+pub struct SystemResult {
+    /// Original stream id (the dataset row).
+    pub id: usize,
+    /// The family's input field for the sample.
+    pub input: Vec<f64>,
+    pub solution: Vec<f64>,
+    pub stats: SolveStats,
+}
+
+impl SystemResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("iters", Json::Num(self.stats.iters as f64)),
+            ("seconds", Json::Num(self.stats.seconds)),
+            // Bit-exact: the residual feeds the merged metrics verbatim.
+            ("rel_residual", Json::Str(hex_u64(self.stats.rel_residual.to_bits()))),
+            ("stop", Json::Str(self.stats.stop.label().to_string())),
+            ("input", Json::Str(encode_f64s(&self.input))),
+            ("solution", Json::Str(encode_f64s(&self.solution))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SystemResult> {
+        let str_field = |key: &str| -> Result<&str> {
+            j.get(key).and_then(|v| v.as_str()).with_context(|| format!("missing {key:?}"))
+        };
+        let num_field = |key: &str| -> Result<f64> {
+            j.get(key).and_then(|v| v.as_f64()).with_context(|| format!("missing {key:?}"))
+        };
+        Ok(SystemResult {
+            id: num_field("id")? as usize,
+            input: decode_f64s(str_field("input")?)?,
+            solution: decode_f64s(str_field("solution")?)?,
+            stats: SolveStats {
+                iters: num_field("iters")? as usize,
+                seconds: num_field("seconds")?,
+                rel_residual: f64::from_bits(parse_hex_u64(str_field("rel_residual")?)?),
+                stop: StopReason::parse(str_field("stop")?)?,
+                trace: vec![],
+            },
+        })
+    }
+}
+
+/// `POST /shards/:id/result` body: everything the coordinator needs to
+/// merge one shard and fold its tallies into the run metrics.
+#[derive(Debug, Clone)]
+pub struct ShardResultMsg {
+    pub shard: usize,
+    /// Which grant of this shard produced the result (lease retries bump it).
+    pub attempt: u32,
+    pub worker: String,
+    pub systems: Vec<SystemResult>,
+    pub counters: SolveCounters,
+    pub sparsity_reuse: usize,
+    pub symbolic_reuse: usize,
+    pub workspace_reuse: usize,
+    /// FNV-1a over ids + payload bytes — see [`shard_checksum`].
+    pub checksum: u64,
+}
+
+impl ShardResultMsg {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", Json::Num(self.shard as f64)),
+            ("attempt", Json::Num(self.attempt as f64)),
+            ("worker", Json::Str(self.worker.clone())),
+            ("checksum", Json::Str(hex_u64(self.checksum))),
+            ("counters", counters_to_json(&self.counters)),
+            ("sparsity_reuse", Json::Num(self.sparsity_reuse as f64)),
+            ("symbolic_reuse", Json::Num(self.symbolic_reuse as f64)),
+            ("workspace_reuse", Json::Num(self.workspace_reuse as f64)),
+            ("systems", Json::Arr(self.systems.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardResultMsg> {
+        let num_field = |key: &str| -> Result<f64> {
+            j.get(key).and_then(|v| v.as_f64()).with_context(|| format!("missing {key:?}"))
+        };
+        let systems = j
+            .get("systems")
+            .and_then(|v| v.as_arr())
+            .context("missing \"systems\"")?
+            .iter()
+            .map(SystemResult::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardResultMsg {
+            shard: num_field("shard")? as usize,
+            attempt: num_field("attempt")? as u32,
+            worker: j
+                .get("worker")
+                .and_then(|v| v.as_str())
+                .context("missing \"worker\"")?
+                .to_string(),
+            systems,
+            counters: counters_from_json(j.get("counters").context("missing \"counters\"")?)?,
+            sparsity_reuse: num_field("sparsity_reuse")? as usize,
+            symbolic_reuse: num_field("symbolic_reuse")? as usize,
+            workspace_reuse: num_field("workspace_reuse")? as usize,
+            checksum: parse_hex_u64(
+                j.get("checksum").and_then(|v| v.as_str()).context("missing \"checksum\"")?,
+            )?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_hex_codec_is_bit_exact() {
+        let xs = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            f64::MIN_POSITIVE,
+            f64::MIN_POSITIVE / 2.0, // subnormal
+            f64::MAX,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            std::f64::consts::PI,
+        ];
+        let back = decode_f64s(&encode_f64s(&xs)).unwrap();
+        assert_eq!(back.len(), xs.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} lost bits over the wire");
+        }
+        // -0.0 specifically: the JSON number path would print it as 0.
+        assert_eq!(back[1].to_bits(), (-0.0f64).to_bits());
+        assert!(decode_f64s("abc").is_err());
+        assert!(decode_f64s("zz00000000000000").is_err());
+    }
+
+    #[test]
+    fn hex_u64_round_trips() {
+        for v in [0u64, 1, u64::MAX, 0xcbf29ce484222325, (1u64 << 53) + 1] {
+            assert_eq!(parse_hex_u64(&hex_u64(v)).unwrap(), v);
+        }
+        assert!(parse_hex_u64("123").is_err());
+    }
+
+    fn sample_result(id: usize) -> SystemResult {
+        SystemResult {
+            id,
+            input: vec![0.5, -0.0, 3.25],
+            solution: vec![1.0, 2.0, -4.5],
+            stats: SolveStats {
+                iters: 17,
+                seconds: 0.125,
+                rel_residual: 3.2e-9,
+                stop: StopReason::Converged,
+                trace: vec![],
+            },
+        }
+    }
+
+    #[test]
+    fn shard_result_round_trips_and_checksums() {
+        let systems = vec![sample_result(4), sample_result(9)];
+        let msg = ShardResultMsg {
+            shard: 2,
+            attempt: 3,
+            worker: "w1".into(),
+            checksum: shard_checksum(&systems),
+            counters: SolveCounters {
+                matvecs: 10,
+                precond_applies: 9,
+                ortho_flops: (1 << 60) + 7, // above 2^53: JSON numbers would round
+                recycle_reseeds: 1,
+                recycle_carries: 2,
+                harvests: 3,
+            },
+            sparsity_reuse: 1,
+            symbolic_reuse: 1,
+            workspace_reuse: 1,
+            systems,
+        };
+        let back =
+            ShardResultMsg::from_json(&Json::parse(&msg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.shard, 2);
+        assert_eq!(back.attempt, 3);
+        assert_eq!(back.counters, msg.counters);
+        assert_eq!(back.checksum, msg.checksum);
+        assert_eq!(shard_checksum(&back.systems), msg.checksum);
+        for (a, b) in msg.systems.iter().zip(&back.systems) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.stats.iters, b.stats.iters);
+            assert_eq!(a.stats.stop, b.stats.stop);
+            assert_eq!(a.stats.rel_residual.to_bits(), b.stats.rel_residual.to_bits());
+            assert_eq!(a.input, b.input);
+            assert_eq!(a.solution, b.solution);
+        }
+    }
+
+    #[test]
+    fn checksum_is_order_and_content_sensitive() {
+        let a = vec![sample_result(1), sample_result(2)];
+        let mut swapped = vec![sample_result(2), sample_result(1)];
+        assert_ne!(shard_checksum(&a), shard_checksum(&swapped));
+        swapped.reverse();
+        assert_eq!(shard_checksum(&a), shard_checksum(&swapped));
+        let mut tweaked = a.clone();
+        tweaked[0].solution[0] = f64::from_bits(tweaked[0].solution[0].to_bits() ^ 1);
+        assert_ne!(shard_checksum(&a), shard_checksum(&tweaked));
+    }
+}

@@ -1,0 +1,268 @@
+//! `skr work` — the solving side of a distributed run.
+//!
+//! A worker joins a coordinator (`--join HOST:PORT`), downloads the run
+//! plan, and then pulls shard leases until the coordinator reports the run
+//! finished. Each leased shard is solved with [`solve_stream`] — fresh
+//! [`Recycler`]/[`Workspace`]/symbolic state per shard, systems regenerated
+//! on demand from the family's deterministic per-id RNG streams — i.e. the
+//! exact computation a single-node worker thread performs for the same
+//! shard, so the streamed-back solutions and [`SolveCounters`] are
+//! bit-identical to `skr generate`.
+//!
+//! While a shard solves, a background thread renews the lease at a third of
+//! the lease interval; if the worker dies, the heartbeats stop and the
+//! coordinator re-grants the shard to someone else.
+//!
+//! [`Recycler`]: crate::solver::Recycler
+//! [`Workspace`]: crate::solver::Workspace
+//! [`SolveCounters`]: crate::solver::SolveCounters
+
+use super::protocol::{shard_checksum, ShardResultMsg, SystemResult, PROTOCOL_VERSION};
+use crate::pde::ProblemFamily;
+use crate::service::http;
+use crate::service::JobSpec;
+use crate::solver::{solve_stream, SequenceReuse};
+use crate::util::args::Args;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Coordinator address, e.g. `127.0.0.1:7171`.
+    pub join: String,
+    /// Worker name reported with every lease/heartbeat/result.
+    pub name: String,
+}
+
+impl WorkerConfig {
+    pub fn from_args(args: &Args) -> Result<WorkerConfig> {
+        let join = args
+            .get("join")
+            .context("skr work requires --join HOST:PORT (the coordinator address)")?
+            .to_string();
+        Ok(WorkerConfig {
+            join,
+            name: args.str_or("name", &format!("w{}", std::process::id())),
+        })
+    }
+}
+
+/// Join a coordinator and solve leases until the run finishes.
+pub fn work(cfg: &WorkerConfig) -> Result<()> {
+    let plan = fetch_plan(&cfg.join)?;
+    let version = plan.get("version").and_then(|v| v.as_usize());
+    if version != Some(PROTOCOL_VERSION) {
+        bail!(
+            "coordinator speaks dist protocol {version:?}, this worker speaks {PROTOCOL_VERSION}"
+        );
+    }
+    let spec = JobSpec::from_json(plan.get("spec").context("plan missing \"spec\"")?)?;
+    let pcfg = spec.to_config()?;
+    let family = pcfg.family.build_with(pcfg.unknowns, pcfg.grf_alpha);
+    let master = Rng::new(pcfg.seed);
+    println!(
+        "worker {} joined {} ({} count={} n={} seed={})",
+        cfg.name,
+        cfg.join,
+        family.name(),
+        pcfg.count,
+        pcfg.unknowns,
+        pcfg.seed
+    );
+
+    let mut completed = 0usize;
+    loop {
+        let body = Json::obj(vec![("worker", Json::Str(cfg.name.clone()))]).dump();
+        let lease = match http::request(&cfg.join, "POST", "/lease", Some(&body)) {
+            Ok((200, text)) => Json::parse(&text)?,
+            Ok((status, text)) => bail!("lease request answered {status}: {text}"),
+            Err(e) => {
+                if completed > 0 {
+                    // The coordinator finalizes and exits shortly after the
+                    // last shard lands — a dead socket after successful
+                    // round-trips is the normal end of a run.
+                    println!(
+                        "worker {}: coordinator gone after {completed} shard(s); exiting",
+                        cfg.name
+                    );
+                    return Ok(());
+                }
+                return Err(e.context("requesting a lease"));
+            }
+        };
+        match lease.get("grant").and_then(|g| g.as_str()) {
+            Some("finished") => {
+                println!("worker {}: run finished ({completed} shard(s) accepted)", cfg.name);
+                return Ok(());
+            }
+            Some("wait") => {
+                let ms = lease.get("retry_ms").and_then(|v| v.as_usize()).unwrap_or(250);
+                std::thread::sleep(Duration::from_millis(ms as u64));
+            }
+            Some("lease") => {
+                if solve_lease(cfg, family.as_ref(), &pcfg, &master, &lease)? {
+                    completed += 1;
+                }
+            }
+            other => bail!("unexpected grant {other:?} from coordinator"),
+        }
+    }
+}
+
+/// `GET /plan` with a short connect-retry window so a worker started a
+/// moment before its coordinator still joins.
+fn fetch_plan(join: &str) -> Result<Json> {
+    let mut last = None;
+    for _ in 0..20 {
+        match http::request(join, "GET", "/plan", None) {
+            Ok((200, text)) => return Json::parse(&text),
+            Ok((status, text)) => bail!("GET /plan answered {status}: {text}"),
+            Err(e) => last = Some(e),
+        }
+        std::thread::sleep(Duration::from_millis(250));
+    }
+    Err(last.unwrap_or_else(|| anyhow::anyhow!("no attempts made")))
+        .with_context(|| format!("joining coordinator at {join}"))
+}
+
+/// Solve one leased shard and post the result. Returns whether the
+/// coordinator accepted it (stale/duplicate submissions are discarded
+/// server-side and are not an error here).
+fn solve_lease(
+    cfg: &WorkerConfig,
+    family: &dyn ProblemFamily,
+    pcfg: &crate::coordinator::PipelineConfig,
+    master: &Rng,
+    lease: &Json,
+) -> Result<bool> {
+    let num = |key: &str| -> Result<usize> {
+        lease.get(key).and_then(|v| v.as_usize()).with_context(|| format!("lease missing {key:?}"))
+    };
+    let shard = num("shard")?;
+    let attempt = num("attempt")? as u32;
+    let lease_ms = lease.get("lease_ms").and_then(|v| v.as_usize()).unwrap_or(30_000) as u64;
+    let ids: Vec<usize> = lease
+        .get("ids")
+        .and_then(|v| v.as_arr())
+        .context("lease missing \"ids\"")?
+        .iter()
+        .map(|v| v.as_usize().context("lease ids must be integers"))
+        .collect::<Result<_>>()?;
+    println!("lease shard {shard} attempt {attempt} ({} systems)", ids.len());
+
+    // Renew the lease in the background while the shard solves; a killed
+    // worker stops heartbeating and the coordinator re-grants after the
+    // lease lapses.
+    let stop = Arc::new(AtomicBool::new(false));
+    let heartbeat = {
+        let stop = Arc::clone(&stop);
+        let join_addr = cfg.join.clone();
+        let body = Json::obj(vec![
+            ("shard", Json::Num(shard as f64)),
+            ("attempt", Json::Num(attempt as f64)),
+            ("worker", Json::Str(cfg.name.clone())),
+        ])
+        .dump();
+        std::thread::spawn(move || {
+            let interval = Duration::from_millis((lease_ms / 3).max(100));
+            let mut since_beat = Duration::ZERO;
+            let tick = Duration::from_millis(50);
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(tick);
+                since_beat += tick;
+                if since_beat >= interval {
+                    since_beat = Duration::ZERO;
+                    let _ = http::request(&join_addr, "POST", "/heartbeat", Some(&body));
+                }
+            }
+        })
+    };
+
+    let solved = (|| -> Result<(Vec<SystemResult>, SequenceReuse)> {
+        let mut systems: Vec<SystemResult> = Vec::with_capacity(ids.len());
+        let reuse = solve_stream(
+            &ids,
+            |id| family.sample(id, &mut master.split(id as u64)),
+            pcfg.engine,
+            pcfg.precond,
+            &pcfg.solver,
+            |sys, solution, stats| {
+                let input = family.input_field(&sys);
+                systems.push(SystemResult { id: sys.id, input, solution, stats });
+                Ok(())
+            },
+        )?;
+        Ok((systems, reuse))
+    })();
+    stop.store(true, Ordering::Relaxed);
+    let _ = heartbeat.join();
+    let (systems, reuse) = solved?;
+
+    let msg = ShardResultMsg {
+        shard,
+        attempt,
+        worker: cfg.name.clone(),
+        checksum: shard_checksum(&systems),
+        counters: reuse.counters,
+        sparsity_reuse: reuse.sparsity_reuse,
+        symbolic_reuse: reuse.symbolic_reuse,
+        workspace_reuse: reuse.workspace_reuse,
+        systems,
+    };
+    let path = format!("/shards/{shard}/result");
+    let (status, text) = match http::request(&cfg.join, "POST", &path, Some(&msg.to_json().dump()))
+    {
+        Ok(r) => r,
+        Err(e) => {
+            // Non-fatal: the run may already have completed via another
+            // lease; the next /lease round-trip decides whether to exit.
+            eprintln!("worker {}: posting shard {shard} failed: {e:#}", cfg.name);
+            return Ok(false);
+        }
+    };
+    let disposition = Json::parse(&text)
+        .ok()
+        .and_then(|j| j.get("disposition").and_then(|d| d.as_str()).map(str::to_string));
+    match (status, disposition.as_deref()) {
+        (200, Some("accepted")) => {
+            println!("shard {shard} attempt {attempt}: accepted ({} systems)", msg.systems.len());
+            Ok(true)
+        }
+        (200, Some(other)) => {
+            println!("shard {shard} attempt {attempt}: {other} — discarded by coordinator");
+            Ok(false)
+        }
+        _ => {
+            eprintln!(
+                "worker {}: shard {shard} rejected ({status}): {text}",
+                cfg.name
+            );
+            Ok(false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_args_requires_join() {
+        let args = Args::parse(std::iter::empty());
+        assert!(WorkerConfig::from_args(&args).is_err());
+        let args = Args::parse(
+            "work --join 127.0.0.1:7171".split_whitespace().map(str::to_string),
+        );
+        let cfg = WorkerConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.join, "127.0.0.1:7171");
+        assert!(cfg.name.starts_with('w'), "default name {:?} is pid-derived", cfg.name);
+        let args = Args::parse(
+            "work --join h:1 --name alice".split_whitespace().map(str::to_string),
+        );
+        assert_eq!(WorkerConfig::from_args(&args).unwrap().name, "alice");
+    }
+}

@@ -42,6 +42,9 @@
 //!   workspace reuse counters surfaced by `skr report`.
 //! * [`service`] — the `skr serve` daemon: HTTP/JSON job queue over the
 //!   pipeline with cancellation, crash-safe journaling and live `/metrics`.
+//! * [`dist`] — `skr coordinate` / `skr work`: distributed shard generation
+//!   over the same HTTP framing, with lease/heartbeat fault tolerance and a
+//!   checksum-verified merge that is byte-identical to a single-node run.
 //! * [`bench`] — `skr bench`: named workload manifests, median/IQR timing,
 //!   deterministic op counters and the BENCH_*.json regression gate CI runs.
 //! * [`harness`], [`no`], [`runtime`] — paper tables/figures, the FNO, PJRT.
@@ -60,6 +63,7 @@
 
 pub mod bench;
 pub mod coordinator;
+pub mod dist;
 pub mod harness;
 pub mod la;
 pub mod no;

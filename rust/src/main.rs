@@ -14,6 +14,8 @@
 //! * `report`    — aggregate a `--trace-out` JSONL trace into a summary
 //! * `serve`     — resident job-queue daemon with an HTTP/JSON API
 //! * `submit` / `jobs` / `status` / `cancel` — thin clients for `serve`
+//! * `coordinate` — plan a run and hand out shard leases to remote workers
+//! * `work`      — join a coordinator and solve shard leases
 
 use skr::coordinator::{Pipeline, PipelineConfig};
 use skr::harness;
@@ -37,6 +39,10 @@ fn main() {
         "bench" => skr::bench::run(&args),
         "report" => skr::obs::report::run(&args),
         "serve" => service::serve(&service::ServeConfig::from_args(&args)),
+        "coordinate" => {
+            skr::dist::coordinate(&skr::dist::CoordinateConfig::from_args(&args)).map(|_| ())
+        }
+        "work" => skr::dist::WorkerConfig::from_args(&args).and_then(|cfg| skr::dist::work(&cfg)),
         "submit" => cmd_submit(&args),
         "jobs" => cmd_jobs(&args),
         "status" => cmd_status(&args),
@@ -281,6 +287,22 @@ SERVICE (see README \"Running as a service\")
   jobs       list jobs + queue state          [--addr HOST:PORT]
   status     one job incl. live progress:     skr status <id> [--addr ...]
   cancel     cancel a queued or running job:  skr cancel <id> [--addr ...]
+
+DIST (see README \"Distributed generation\")
+  coordinate plan a run (sort + shard exactly like generate) and serve
+             shard leases to workers; merges results into one dataset that
+             is byte-identical to single-node `generate --threads <shards>`
+             --host 127.0.0.1 --port 7171 (0 = ephemeral)
+             --shards N           shard count (default: --threads)
+             --lease-ms 30000     lease lifetime without a heartbeat
+             --max-attempts 3     grants per shard before DEGRADED flag
+             --backoff-ms 500     requeue backoff base (doubles per attempt)
+             plus every generate flag (--family, --count, --seed, --out, ...)
+             endpoints: GET /plan, POST /lease, POST /heartbeat,
+             POST /shards/:id/result, GET /metrics, GET /healthz
+  work       join a coordinator and solve shard leases until the run ends
+             --join HOST:PORT     coordinator address (required)
+             --name w<pid>        worker name for leases/heartbeats
 "
     );
 }

@@ -15,6 +15,10 @@ use std::time::Duration;
 const MAX_HEAD: usize = 16 * 1024;
 /// Largest accepted request/response body.
 pub const MAX_BODY: usize = 4 * 1024 * 1024;
+/// Fallback socket timeout applied by [`read_request`]/[`write_response`]
+/// when the caller hasn't set one — a hung peer can no longer stall a
+/// single-threaded accept loop forever.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -78,9 +82,19 @@ impl Response {
     }
 }
 
-/// Read one request off the stream (bounded, with a read timeout set by the
-/// caller on the socket).
+/// Read one request off the stream, capped at [`MAX_BODY`]. If the caller
+/// hasn't set a read timeout, [`DEFAULT_IO_TIMEOUT`] is applied first so a
+/// silent client can't hold the connection open indefinitely.
 pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    read_request_capped(stream, MAX_BODY)
+}
+
+/// [`read_request`] with an explicit body cap — the dist shard-result
+/// endpoint accepts far larger payloads than the 4 MB service default.
+pub fn read_request_capped(stream: &mut TcpStream, max_body: usize) -> Result<Request> {
+    if stream.read_timeout()?.is_none() {
+        stream.set_read_timeout(Some(DEFAULT_IO_TIMEOUT))?;
+    }
     let head = read_until_blank_line(stream)?;
     let head_text = std::str::from_utf8(&head).context("non-UTF8 request head")?;
     let mut lines = head_text.split("\r\n");
@@ -101,16 +115,20 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
             }
         }
     }
-    if content_length > MAX_BODY {
-        bail!("body of {content_length} bytes exceeds cap {MAX_BODY}");
+    if content_length > max_body {
+        bail!("body of {content_length} bytes exceeds cap {max_body}");
     }
     let mut body = vec![0u8; content_length];
     stream.read_exact(&mut body).context("reading request body")?;
     Ok(Request { method, path, body })
 }
 
-/// Write a response and flush; always closes after one exchange.
+/// Write a response and flush; always closes after one exchange. Applies
+/// [`DEFAULT_IO_TIMEOUT`] if the caller hasn't set a write timeout.
 pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    if stream.write_timeout()?.is_none() {
+        stream.set_write_timeout(Some(DEFAULT_IO_TIMEOUT))?;
+    }
     let mut head = format!(
         "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
         resp.status,
@@ -217,6 +235,50 @@ mod tests {
         assert_eq!(r.segments(), vec!["jobs", "17"]);
         let r = Request { method: "GET".into(), path: "/".into(), body: vec![] };
         assert!(r.segments().is_empty());
+    }
+
+    #[test]
+    fn default_timeouts_applied_but_caller_settings_win() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            // First connection: no caller timeout — read_request installs the
+            // default so a mute client can't hang us.
+            let (mut stream, _) = listener.accept().unwrap();
+            assert!(stream.read_timeout().unwrap().is_none());
+            let req = read_request(&mut stream).unwrap();
+            assert_eq!(stream.read_timeout().unwrap(), Some(DEFAULT_IO_TIMEOUT));
+            write_response(&mut stream, &Response::json(200, "{}".into())).unwrap();
+            assert_eq!(stream.write_timeout().unwrap(), Some(DEFAULT_IO_TIMEOUT));
+            assert_eq!(req.path, "/a");
+
+            // Second connection: a tighter caller timeout must survive.
+            let (mut stream, _) = listener.accept().unwrap();
+            let tight = Duration::from_secs(10);
+            stream.set_read_timeout(Some(tight)).unwrap();
+            stream.set_write_timeout(Some(tight)).unwrap();
+            read_request(&mut stream).unwrap();
+            write_response(&mut stream, &Response::json(200, "{}".into())).unwrap();
+            assert_eq!(stream.read_timeout().unwrap(), Some(tight));
+            assert_eq!(stream.write_timeout().unwrap(), Some(tight));
+        });
+        request(&addr.to_string(), "GET", "/a", None).unwrap();
+        request(&addr.to_string(), "GET", "/b", None).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn body_cap_is_configurable() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            read_request_capped(&mut stream, 4).is_err()
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"POST /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello").unwrap();
+        let _ = c.flush();
+        assert!(handle.join().unwrap(), "5-byte body must exceed a 4-byte cap");
     }
 
     #[test]

@@ -8,6 +8,11 @@
 //! crash mid-append — is skipped, never fatal. Appends are flushed and
 //! fsync'd per record; jobs are coarse-grained enough that durability is
 //! worth the syscall.
+//!
+//! After replay the journal is [compacted](Journal::compact): terminal
+//! records are dead weight, so the file is rewritten down to a `compacted`
+//! watermark (preserving the id sequence) plus the still-pending jobs,
+//! staged via `.tmp` + rename so a crash mid-compaction loses nothing.
 
 use super::api::JobSpec;
 use super::queue::JobId;
@@ -66,6 +71,15 @@ impl Journal {
             // anything unparseable instead of refusing to start.
             let Ok(ev) = Json::parse(line) else { continue };
             let Some(tag) = ev.get("ev").and_then(|t| t.as_str()) else { continue };
+            if tag == "compacted" {
+                // Watermark left by `compact`: terminal records (and with
+                // them the largest id seen) were dropped, so the sequence
+                // is carried forward explicitly. No "job" key on this one.
+                if let Some(n) = ev.get("next").and_then(|v| v.as_f64()) {
+                    next_id = next_id.max(n as JobId);
+                }
+                continue;
+            }
             let Some(id) = ev.get("job").and_then(|j| j.as_f64()).map(|v| v as JobId) else {
                 continue;
             };
@@ -83,6 +97,47 @@ impl Journal {
             }
         }
         Ok(Replay { pending, next_id })
+    }
+
+    /// Rewrite the journal down to its live content: one `compacted`
+    /// watermark record carrying `next_id`, then a `submitted` record per
+    /// still-pending job. Staged to `<path>.tmp` and renamed over the
+    /// original (the dataset atomic-finalize pattern) so a crash
+    /// mid-compaction leaves the old journal intact. A missing journal is
+    /// a no-op. Call after [`Journal::replay`], before [`Journal::open`].
+    pub fn compact(path: &Path, replay: &Replay) -> Result<()> {
+        if !path.exists() {
+            return Ok(());
+        }
+        let mut text = Json::obj(vec![
+            ("ev", Json::Str("compacted".into())),
+            ("next", Json::Num(replay.next_id as f64)),
+            ("ts", Json::Num(unix_now())),
+        ])
+        .dump();
+        text.push('\n');
+        for (id, spec) in &replay.pending {
+            text.push_str(
+                &Json::obj(vec![
+                    ("ev", Json::Str("submitted".into())),
+                    ("job", Json::Num(*id as f64)),
+                    ("ts", Json::Num(unix_now())),
+                    ("spec", spec.to_json()),
+                ])
+                .dump(),
+            );
+            text.push('\n');
+        }
+        let tmp = path.with_extension("jsonl.tmp");
+        {
+            let mut f =
+                File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(text.as_bytes())?;
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
+        Ok(())
     }
 
     pub fn submitted(&self, id: JobId, spec: &JobSpec) {
@@ -192,6 +247,62 @@ mod tests {
         assert_eq!(r.pending.len(), 1);
         assert_eq!(r.pending[0].0, 1);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replay_after_compaction_matches_and_appends_continue() {
+        let path = unique_journal();
+        let j = Journal::open(&path).unwrap();
+        let spec = JobSpec::default();
+        j.submitted(1, &spec);
+        j.submitted(2, &spec);
+        j.submitted(3, &spec);
+        j.started(1);
+        j.done(1);
+        j.started(2);
+        drop(j);
+        let ids = |r: &Replay| r.pending.iter().map(|(id, _)| *id).collect::<Vec<JobId>>();
+        let before = Journal::replay(&path).unwrap();
+        let lines_before = std::fs::read_to_string(&path).unwrap().lines().count();
+        Journal::compact(&path, &before).unwrap();
+        let lines_after = std::fs::read_to_string(&path).unwrap().lines().count();
+        assert!(lines_after < lines_before, "compaction must shrink: {lines_after} >= {lines_before}");
+        let after = Journal::replay(&path).unwrap();
+        assert_eq!(ids(&after), ids(&before));
+        assert_eq!(after.next_id, before.next_id);
+        assert_eq!(after.pending[0].1, spec);
+        // Lifecycle appends keep working on the compacted file.
+        let j = Journal::open(&path).unwrap();
+        j.done(2);
+        drop(j);
+        let r = Journal::replay(&path).unwrap();
+        assert_eq!(ids(&r), vec![3]);
+        assert_eq!(r.next_id, 4);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compaction_keeps_next_id_when_everything_is_terminal() {
+        let path = unique_journal();
+        let j = Journal::open(&path).unwrap();
+        j.submitted(9, &JobSpec::default());
+        j.started(9);
+        j.done(9);
+        drop(j);
+        let before = Journal::replay(&path).unwrap();
+        Journal::compact(&path, &before).unwrap();
+        let r = Journal::replay(&path).unwrap();
+        assert!(r.pending.is_empty());
+        assert_eq!(r.next_id, 10, "the watermark must carry the id sequence");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compacting_a_missing_journal_is_a_noop() {
+        let path = unique_journal();
+        let replay = Journal::replay(&path).unwrap();
+        Journal::compact(&path, &replay).unwrap();
+        assert!(!path.exists());
     }
 
     #[test]

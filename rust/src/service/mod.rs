@@ -78,6 +78,10 @@ impl Service {
     pub fn new(cfg: &ServeConfig) -> Result<(Arc<Service>, usize)> {
         let journal_path = cfg.state_dir.join("journal.jsonl");
         let replay = Journal::replay(&journal_path)?;
+        // Terminal records are dead weight after replay; rewrite the
+        // journal down to its live content so it stays bounded across
+        // restarts.
+        Journal::compact(&journal_path, &replay)?;
         let journal = Journal::open(&journal_path)?;
         let svc = Service {
             queue: JobQueue::new(cfg.queue_capacity, replay.next_id),

@@ -142,6 +142,70 @@ pub fn solve_sequence_traced(
     Ok((out, reuse))
 }
 
+/// Streaming variant of [`solve_sequence_traced`]: systems are produced on
+/// demand by `fetch` (bounded memory — one system lives at a time) and each
+/// `(system, solution, stats)` triple is handed to `emit` as soon as it is
+/// solved. The per-sequence reusable state (one [`Workspace`], one cached
+/// `SymbolicPrecond`, one [`Recycler`]) is threaded through the solves in
+/// exactly the order [`solve_sequence_traced`] would, so for the same
+/// systems the solutions, stats and [`SolveCounters`] are bit-identical.
+/// This is the shard-solve path of `skr work`.
+pub fn solve_stream<F, G>(
+    ids: &[usize],
+    mut fetch: F,
+    engine: Engine,
+    precond: PrecondKind,
+    cfg: &SolverConfig,
+    mut emit: G,
+) -> Result<SequenceReuse>
+where
+    F: FnMut(usize) -> Result<LinearSystem>,
+    G: FnMut(LinearSystem, Vec<f64>, SolveStats) -> Result<()>,
+{
+    let mut rec = Recycler::new();
+    let mut ws = Workspace::new();
+    let mut symbolic: Option<SymbolicPrecond> = None;
+    let mut prev_sparsity: Option<Arc<Sparsity>> = None;
+    let mut reuse = SequenceReuse { systems: ids.len(), ..Default::default() };
+    for &id in ids {
+        let sys = fetch(id)?;
+        if prev_sparsity.as_ref().is_some_and(|sp| Arc::ptr_eq(sp, sys.a.sparsity())) {
+            reuse.sparsity_reuse += 1;
+        } else {
+            prev_sparsity = Some(sys.a.sparsity().clone());
+        }
+        let sym = match symbolic.take() {
+            Some(s) if s.matches(&sys.a) => {
+                reuse.symbolic_reuse += 1;
+                s
+            }
+            _ => precond.symbolic(sys.a.sparsity())?,
+        };
+        let p = sym.refactor(&sys.a)?;
+        symbolic = Some(sym);
+        let mut x = vec![0.0; sys.b.len()];
+        let stats = match engine {
+            Engine::Gmres => {
+                gmres_ws(&sys.a, &sys.b, &mut x, p.as_ref(), cfg, &mut NoopObserver, &mut ws)
+            }
+            Engine::SkrRecycle => gcrodr_ws(
+                &sys.a,
+                &sys.b,
+                &mut x,
+                p.as_ref(),
+                cfg,
+                &mut rec,
+                &mut NoopObserver,
+                &mut ws,
+            ),
+        };
+        emit(sys, x, stats)?;
+    }
+    reuse.workspace_reuse = ws.reuse_count();
+    reuse.counters = *ws.counters();
+    Ok(reuse)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +296,43 @@ mod tests {
         assert_eq!(reuse.sparsity_reuse, 2);
         assert_eq!(reuse.symbolic_reuse, 2);
         assert_eq!(reuse.workspace_reuse, 2);
+    }
+
+    #[test]
+    fn stream_matches_sequence_bitwise() {
+        // The dist worker's contract: fetching systems on demand through
+        // solve_stream yields the same bits (solutions, stats, reuse and
+        // op-counter tallies) as the in-memory sequence driver.
+        let systems = sequence(100, 3);
+        let cfg = SolverConfig::default().with_tol(1e-9).with_m(20).with_k(4);
+        for engine in [Engine::Gmres, Engine::SkrRecycle] {
+            let (seq, seq_reuse) =
+                solve_sequence_traced(&systems, engine, PrecondKind::Jacobi, &cfg).unwrap();
+            let ids: Vec<usize> = (0..systems.len()).collect();
+            let mut streamed: Vec<(Vec<f64>, SolveStats)> = Vec::new();
+            let reuse = solve_stream(
+                &ids,
+                |id| Ok(systems[id].clone()),
+                engine,
+                PrecondKind::Jacobi,
+                &cfg,
+                |_sys, x, s| {
+                    streamed.push((x, s));
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(reuse, seq_reuse, "{engine:?}");
+            assert_eq!(seq.len(), streamed.len());
+            for ((x1, s1), (x2, s2)) in seq.iter().zip(&streamed) {
+                assert_eq!(s1.iters, s2.iters);
+                assert_eq!(s1.stop, s2.stop);
+                assert_eq!(s1.rel_residual.to_bits(), s2.rel_residual.to_bits());
+                for (u, v) in x1.iter().zip(x2) {
+                    assert_eq!(u.to_bits(), v.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Solve statistics and configuration shared by GMRES and GCRO-DR.
 
+use anyhow::{bail, Result};
+
 /// Why a solve stopped.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StopReason {
@@ -20,6 +22,17 @@ impl StopReason {
             StopReason::MaxIters => "max_iters",
             StopReason::Breakdown => "breakdown",
         }
+    }
+
+    /// Inverse of [`StopReason::label`] — decodes the tag off the wire
+    /// (trace files, the dist shard-result protocol).
+    pub fn parse(s: &str) -> Result<StopReason> {
+        Ok(match s {
+            "converged" => StopReason::Converged,
+            "max_iters" => StopReason::MaxIters,
+            "breakdown" => StopReason::Breakdown,
+            other => bail!("unknown stop reason {other:?}"),
+        })
     }
 }
 
@@ -89,5 +102,18 @@ impl SolverConfig {
     pub fn with_trace(mut self, record: bool) -> Self {
         self.record_trace = record;
         self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_reason_label_round_trips() {
+        for stop in [StopReason::Converged, StopReason::MaxIters, StopReason::Breakdown] {
+            assert_eq!(StopReason::parse(stop.label()).unwrap(), stop);
+        }
+        assert!(StopReason::parse("exploded").is_err());
     }
 }

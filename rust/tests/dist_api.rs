@@ -1,0 +1,164 @@
+//! End-to-end tests for the distributed generation subsystem: a real
+//! coordinator on an ephemeral port, real workers joining over HTTP, and
+//! byte-level comparison against the single-node pipeline.
+
+use skr::coordinator::Pipeline;
+use skr::dist::{coordinate_bound, work, CoordinateConfig, DistSummary, LeaseConfig, WorkerConfig};
+use skr::service::http::request;
+use skr::service::JobSpec;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread::JoinHandle;
+
+fn unique_dir(tag: &str) -> PathBuf {
+    static COUNTER: AtomicUsize = AtomicUsize::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("skr_dist_{tag}_{}_{n}", std::process::id()))
+}
+
+fn small_spec(seed: u64, count: usize, out: &std::path::Path) -> JobSpec {
+    JobSpec {
+        family: "darcy".into(),
+        unknowns: 100,
+        count,
+        engine: "skr".into(),
+        precond: "jacobi".into(),
+        sort: "greedy".into(),
+        threads: 2,
+        seed,
+        out: Some(out.display().to_string()),
+        ..JobSpec::default()
+    }
+}
+
+/// Run the reference single-node pipeline (`skr generate --threads 2`) for
+/// the same spec into `dir` and return its metrics.
+fn reference_run(spec: &JobSpec, dir: &std::path::Path) -> skr::coordinator::metrics::RunMetrics {
+    let mut cfg = spec.to_config().unwrap();
+    cfg.out_dir = Some(dir.to_path_buf());
+    Pipeline::new(cfg).run().unwrap().metrics
+}
+
+/// Bind an ephemeral port and launch the coordinator on a thread.
+fn spawn_coordinator(cfg: CoordinateConfig) -> (String, JoinHandle<anyhow::Result<DistSummary>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || coordinate_bound(&cfg, listener));
+    (addr, handle)
+}
+
+fn spawn_worker(addr: &str, name: &str) -> JoinHandle<anyhow::Result<()>> {
+    let cfg = WorkerConfig { join: addr.to_string(), name: name.to_string() };
+    std::thread::spawn(move || work(&cfg))
+}
+
+fn assert_datasets_byte_identical(a: &std::path::Path, b: &std::path::Path) {
+    for file in ["inputs.npy", "solutions.npy", "meta.json"] {
+        let got = std::fs::read(a.join(file)).unwrap();
+        let want = std::fs::read(b.join(file)).unwrap();
+        assert_eq!(got, want, "{file} differs between distributed and single-node runs");
+    }
+}
+
+#[test]
+fn two_workers_match_single_node_byte_for_byte() {
+    let dist_dir = unique_dir("two_out");
+    let ref_dir = unique_dir("two_ref");
+    let spec = small_spec(3, 12, &dist_dir);
+    let ref_metrics = reference_run(&spec, &ref_dir);
+
+    let (addr, coord) = spawn_coordinator(CoordinateConfig {
+        bind: String::new(), // unused: the listener is pre-bound
+        spec,
+        shards: 2,
+        lease: LeaseConfig::default(),
+        linger_ms: 1_000,
+    });
+    let wa = spawn_worker(&addr, "wa");
+    let wb = spawn_worker(&addr, "wb");
+    wa.join().unwrap().unwrap();
+    wb.join().unwrap().unwrap();
+    let summary = coord.join().unwrap().unwrap();
+
+    // A clean run: one grant per shard, nothing expired or duplicated.
+    assert_eq!(summary.systems, 12);
+    assert_eq!(summary.shards, 2);
+    assert_eq!(summary.granted, 2, "{summary:?}");
+    assert_eq!(summary.expired, 0);
+    assert_eq!(summary.duplicates, 0);
+    assert!(!summary.degraded);
+    assert!(summary.bytes_merged > 0);
+    assert_eq!(summary.dataset.as_ref().unwrap().count, 12);
+
+    // The merged dataset is byte-identical to `generate --threads 2` …
+    assert_datasets_byte_identical(&dist_dir, &ref_dir);
+    // … and so are the aggregates: summed op counters match *exactly*
+    // (u64), as do the iteration totals and the worst-residual bits.
+    assert_eq!(summary.metrics.counters, ref_metrics.counters);
+    assert_eq!(summary.metrics.total_iters, ref_metrics.total_iters);
+    assert_eq!(summary.metrics.max_iter_hits, ref_metrics.max_iter_hits);
+    assert_eq!(
+        summary.metrics.rel_residual_worst.to_bits(),
+        ref_metrics.rel_residual_worst.to_bits()
+    );
+    assert_eq!(summary.metrics.sparsity_reuse, ref_metrics.sparsity_reuse);
+    assert_eq!(summary.metrics.symbolic_reuse, ref_metrics.symbolic_reuse);
+    assert_eq!(summary.metrics.workspace_reuse, ref_metrics.workspace_reuse);
+    // Per-shard spans landed on the timeline next to the plan stages.
+    let names: Vec<&str> = summary.spans.iter().map(|s| s.name.as_str()).collect();
+    for want in ["gen", "sort", "shard", "dist/shard0", "dist/shard1"] {
+        assert!(names.contains(&want), "missing {want} span in {names:?}");
+    }
+
+    let _ = std::fs::remove_dir_all(&dist_dir);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+}
+
+#[test]
+fn abandoned_lease_expires_and_is_regranted() {
+    let dist_dir = unique_dir("exp_out");
+    let ref_dir = unique_dir("exp_ref");
+    let spec = small_spec(11, 8, &dist_dir);
+    let ref_metrics = reference_run(&spec, &ref_dir);
+
+    let (addr, coord) = spawn_coordinator(CoordinateConfig {
+        bind: String::new(),
+        spec,
+        shards: 2,
+        lease: LeaseConfig { lease_ms: 400, max_attempts: 5, backoff_ms: 50 },
+        linger_ms: 1_000,
+    });
+
+    // A rogue client grabs a lease and vanishes: no heartbeat, no result —
+    // the dead-worker scenario.
+    let (status, plan) = request(&addr, "GET", "/plan", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(plan.contains("\"version\""), "{plan}");
+    let (status, body) =
+        request(&addr, "POST", "/lease", Some(r#"{"worker":"rogue"}"#)).unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("\"grant\":\"lease\""), "{body}");
+    let (status, metrics) = request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(metrics.contains("skr_dist_leases_granted_total 1"), "{metrics}");
+    assert!(metrics.contains("skr_dist_shards_done 0"), "{metrics}");
+
+    // One live worker must still complete the whole run: it picks up the
+    // free shard immediately and the abandoned one after its lease lapses.
+    spawn_worker(&addr, "steady").join().unwrap().unwrap();
+    let summary = coord.join().unwrap().unwrap();
+
+    assert!(summary.expired >= 1, "abandoned lease never expired: {summary:?}");
+    assert!(summary.granted >= 3, "{summary:?}");
+    assert!(!summary.degraded, "{summary:?}");
+    assert_eq!(summary.systems, 8);
+
+    // The retried shard re-solved to the very same bytes.
+    assert_datasets_byte_identical(&dist_dir, &ref_dir);
+    assert_eq!(summary.metrics.counters, ref_metrics.counters);
+    assert_eq!(summary.metrics.total_iters, ref_metrics.total_iters);
+
+    let _ = std::fs::remove_dir_all(&dist_dir);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+}
